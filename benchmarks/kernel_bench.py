@@ -1,0 +1,98 @@
+"""Kernel-layer benchmarks (CPU: XLA blockwise path vs naive reference —
+the TPU Pallas numbers are dry-run/roofline-derived, see §Roofline).
+
+Measures wall-time per call and, for the flash path, peak-memory proxy
+(largest intermediate) derived from jax.eval_shape over the two impls.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import attention_ref, ssd_chunked_ref, ssd_sequential_ref
+from repro.kernels.xla_flash import blockwise_attention
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_flash_vs_naive():
+    B, S, H, K, D = 1, 1024, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, K, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, K, D), jnp.float32)
+    naive = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+    flash = jax.jit(lambda q, k, v: blockwise_attention(q, k, v, True, None,
+                                                        0, 256))
+    t_naive = _time(naive, q, k, v)
+    t_flash = _time(flash, q, k, v)
+    # peak intermediate: naive materialises [B,K,G,S,S] fp32
+    naive_peak = B * H * S * S * 4
+    flash_peak = B * H * S * 256 * 4
+    return [
+        ("flash_attention_xla_1k", t_flash, f"naive {t_naive:.0f}us"),
+        ("flash_attention_mem_ratio", 0.0,
+         f"{naive_peak / flash_peak:.0f}x smaller"),
+    ]
+
+
+def bench_ssd_chunked_vs_sequential():
+    B, S, H, P, G, N = 1, 2048, 4, 64, 1, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+    chunked = jax.jit(lambda *a: ssd_chunked_ref(*a, chunk=128))
+    seq = jax.jit(lambda *a: ssd_sequential_ref(*a)[0])
+    t_c = _time(chunked, x, dt, A, Bm, Cm)
+    t_s = _time(seq, x, dt, A, Bm, Cm)
+    return [
+        ("ssd_chunked_2k", t_c, f"sequential {t_s:.0f}us "
+         f"({t_s / t_c:.1f}x slower)"),
+    ]
+
+
+def bench_pallas_interpret_correctness_path():
+    """Interpret-mode kernels (the validation path used in CI)."""
+    from repro.kernels.flash_attention import flash_attention as fk
+    from repro.kernels.ssd_scan import ssd_scan as sk
+
+    B, S, H, D = 1, 128, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.float32)
+    t0 = time.perf_counter()
+    fk(q, k, v, causal=True, block_q=64, block_k=64, interpret=True)
+    t_flash = (time.perf_counter() - t0) * 1e6
+    x = jax.random.normal(ks[0], (B, S, 2, 32), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, 2)))
+    A = -jnp.ones((2,))
+    Bm = jax.random.normal(ks[3], (B, S, 1, 16))
+    Cm = jax.random.normal(ks[4], (B, S, 1, 16))
+    t0 = time.perf_counter()
+    sk(x, dt, A, Bm, Cm, chunk=32, interpret=True)
+    t_ssd = (time.perf_counter() - t0) * 1e6
+    return [
+        ("pallas_flash_interpret_128", t_flash, "validation path"),
+        ("pallas_ssd_interpret_128", t_ssd, "validation path"),
+    ]
+
+
+def run_all():
+    rows = []
+    for fn in (bench_flash_vs_naive, bench_ssd_chunked_vs_sequential,
+               bench_pallas_interpret_correctness_path):
+        rows.extend(fn())
+    return rows

@@ -1,0 +1,31 @@
+"""Roofline summary derived from the dry-run sweep records (§Roofline).
+
+Reads dryrun_results/ if present; prints one row per assembled cell with
+the extrapolated terms.  Falls back to a note when the sweep hasn't run.
+"""
+from __future__ import annotations
+
+import os
+
+
+def run_all():
+    rows = []
+    d = os.environ.get("REPRO_DRYRUN_DIR", "dryrun_results")
+    if not os.path.isdir(d):
+        return [("roofline_table", 0.0, "run repro.launch.sweep_dryrun first")]
+    from repro.launch.aggregate import assemble
+
+    cells = assemble(d)
+    ok = [r for r in cells if "compute_s" in r]
+    for r in ok:
+        rows.append((
+            f"roofline_{r['arch']}_{r['shape']}", 0.0,
+            f"dom={r['dominant']} frac={r['roofline_fraction']:.3f} "
+            f"useful={r['useful_ratio']:.2f}"))
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        rows.append(("roofline_worst_cell", 0.0,
+                     f"{worst['arch']}x{worst['shape']} "
+                     f"frac={worst['roofline_fraction']:.3f}"))
+    rows.append(("roofline_cells_assembled", 0.0, f"{len(ok)}/{len(cells)}"))
+    return rows

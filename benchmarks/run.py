@@ -1,0 +1,24 @@
+# One function per paper claim / system layer. Prints
+# ``name,us_per_call,derived`` CSV (see each module for what is measured).
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import expocloud_bench, kernel_bench, roofline_bench, \
+        train_bench
+
+    rows = []
+    for mod in (expocloud_bench, kernel_bench, train_bench, roofline_bench):
+        try:
+            rows.extend(mod.run_all())
+        except Exception as e:  # noqa: BLE001 — report and continue
+            rows.append((f"{mod.__name__}_FAILED", 0.0, repr(e)[:80]))
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Substrate benchmarks: training-step wall time and serving throughput on
+reduced configs (CPU) — regression tracking for the framework layers."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.data.synthetic import batch_at, data_config_for
+from repro.models import lm
+from repro.models.params import init_params
+from repro.train.optimizer import get_optimizer
+from repro.train.schedule import constant
+from repro.train.train_step import make_train_step
+
+
+def bench_train_step(arch="smollm-360m"):
+    cfg = reduced_config(arch)
+    params = init_params(lm.make_lm(cfg), jax.random.PRNGKey(0))
+    opt = get_optimizer("adamw")
+    state = opt.init(params)
+    dc = data_config_for(cfg, seq_len=64, batch_size=4)
+    # no donation here: freshly-initialised m/v zeros may alias the same
+    # buffer, and XLA rejects donating one buffer twice
+    step_fn = jax.jit(make_train_step(cfg, opt, constant(1e-3)))
+    batch = {k: jnp.asarray(v) for k, v in batch_at(dc, 0).items()}
+    params, state, m = step_fn(params, state, batch, jnp.int32(0))
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    iters = 5
+    for i in range(iters):
+        batch = {k: jnp.asarray(v) for k, v in batch_at(dc, i + 1).items()}
+        params, state, m = step_fn(params, state, batch, jnp.int32(i))
+    jax.block_until_ready(m["loss"])
+    us = (time.perf_counter() - t0) / iters * 1e6
+    toks = dc.seq_len * dc.batch_size
+    return [(f"train_step_{arch}", us, f"{toks/us*1e6:.0f} tok/s")]
+
+
+def bench_decode_throughput(arch="mamba2-130m"):
+    from repro.serve.engine import DecodeEngine, Request
+
+    cfg = reduced_config(arch)
+    params = init_params(lm.make_lm(cfg), jax.random.PRNGKey(0))
+    eng = DecodeEngine(cfg, params, batch_slots=4, max_seq=96)
+    for i in range(4):
+        eng.submit(Request(prompt=np.arange(4, dtype=np.int32) + i,
+                           max_new_tokens=16))
+    t0 = time.perf_counter()
+    steps = eng.run_until_drained()
+    dt = time.perf_counter() - t0
+    us = dt / max(steps, 1) * 1e6
+    return [(f"decode_step_{arch}", us,
+             f"{4*16/dt:.0f} tok/s over 4 slots")]
+
+
+def run_all():
+    rows = []
+    rows += bench_train_step("smollm-360m")
+    rows += bench_train_step("mamba2-130m")
+    rows += bench_decode_throughput("mamba2-130m")
+    rows += bench_decode_throughput("smollm-360m")
+    return rows

@@ -1,0 +1,52 @@
+"""Quickstart: the three layers of the framework in ~60 lines.
+
+ 1. ExpoCloud (the paper): run a parameter sweep on the simulated cloud.
+ 2. Substrate: train a reduced LM for a few steps with checkpointing.
+ 3. Dry-run: lower+compile one cell on a small host-device mesh and print
+    its roofline terms (full 512-device runs: repro.launch.sweep_dryrun).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import subprocess
+import sys
+import tempfile
+
+# ---------------------------------------------------------------- 1. sweep
+from repro.core.server import ServerConfig
+from repro.core.sim import SimCluster, SimParams, SimTask
+
+tasks = [SimTask((n, 0), ("n", "id"), (n,), sim_duration=0.4 * n,
+                 deadline=3.0, result=(n * n,))
+         for n in range(1, 11)]
+cluster = SimCluster(tasks, ServerConfig(max_clients=2, use_backup=False),
+                     SimParams(client_workers=2))
+server = cluster.run(until=600)
+print("[1] ExpoCloud sweep:")
+print("    solved:",
+      [p[0] for p, r, s in server.final_results.rows if r is not None],
+      "| pruned by domino:",
+      [p[0] for p, r, s in server.final_results.rows if s == "pruned"])
+
+# ---------------------------------------------------------------- 2. train
+from repro.configs import reduced_config
+from repro.data.synthetic import data_config_for
+from repro.train.loop import TrainJob, run_training
+
+cfg = reduced_config("smollm-360m")
+dc = data_config_for(cfg, seq_len=64, batch_size=4)
+with tempfile.TemporaryDirectory() as td:
+    hist, _, _ = run_training(
+        cfg, dc, TrainJob(total_steps=20, ckpt_every=10, ckpt_dir=td,
+                          log_every=10, warmup=5))
+print(f"[2] trained reduced smollm: loss {hist[0]['loss']:.3f} -> "
+      f"{hist[-1]['loss']:.3f}")
+
+# ---------------------------------------------------------------- 3. dryrun
+print("[3] dry-run one cell on an 8-device host mesh:")
+env = dict(os.environ, PYTHONPATH="src", REPRO_DRYRUN_DEVICES="8")
+subprocess.run(
+    [sys.executable, "-m", "repro.launch.dryrun", "--arch", "mamba2-130m",
+     "--shape", "train_4k", "--mesh-shape", "2", "4",
+     "--mesh-axes", "data", "model"],
+    env=env, check=True)

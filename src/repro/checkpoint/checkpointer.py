@@ -1,0 +1,120 @@
+"""Checkpointing: atomic, async-capable, reshard-on-restore.
+
+Layout:  <dir>/step_<N>/arrays.npz + meta.json   (tmp-dir + rename = atomic)
+
+* ``save`` snapshots to host (jax.device_get) synchronously, then writes to
+  disk either inline or on a background thread (``async_write=True``) so the
+  train loop overlaps I/O with compute — the fault-tolerance story at scale
+  is frequent cheap checkpoints, not rare heroic ones.
+* ``restore`` takes a *like* tree (array or ShapeDtypeStruct leaves) for
+  structure, and an optional shardings tree: arrays are device_put with the
+  *target* sharding, which is what makes elastic restarts onto a different
+  mesh work (see sharding/reshard.py and tests/test_checkpoint.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import ml_dtypes
+import numpy as np
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out
+
+
+def save(directory: str, step: int, tree, *, metadata: dict | None = None,
+         async_write: bool = False) -> threading.Thread | None:
+    """Snapshot ``tree`` for ``step``. Returns the writer thread if async."""
+    host = {}
+    dtypes = {}
+    for k, v in _flatten(tree).items():
+        arr = np.asarray(jax.device_get(v))
+        dtypes[k] = str(arr.dtype)
+        if arr.dtype == ml_dtypes.bfloat16:  # npz can't round-trip bf16
+            arr = arr.view(np.uint16)
+        host[k] = arr
+    meta = dict(metadata or {}, step=step, time=time.time(), dtypes=dtypes)
+
+    def write():
+        os.makedirs(directory, exist_ok=True)
+        tmp = os.path.join(directory, f".tmp_step_{step}_{os.getpid()}")
+        final = os.path.join(directory, f"step_{step}")
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"), **host)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if async_write:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return t
+    write()
+    return None
+
+
+def available_steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_"):
+            try:
+                steps.append(int(name.split("_", 1)[1]))
+            except ValueError:
+                pass
+    return sorted(steps)
+
+
+def restore(directory: str, like, *, step: int | None = None,
+            shardings=None):
+    """Restore into the structure of ``like``. Returns (tree, step, meta)."""
+    steps = available_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints in {directory}")
+    step = steps[-1] if step is None else step
+    path = os.path.join(directory, f"step_{step}")
+    arrays = np.load(os.path.join(path, "arrays.npz"))
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+
+    keys = _flatten(like)
+    sh = _flatten(shardings) if shardings is not None else {}
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    flat_paths = list(keys)
+    out = {}
+    dtype_map = meta.get("dtypes", {})
+    for key, leaf in keys.items():
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = arrays[key]
+        if dtype_map.get(key) == "bfloat16":
+            arr = arr.view(ml_dtypes.bfloat16)
+        arr = arr.astype(leaf.dtype)
+        if key in sh and sh[key] is not None:
+            out[key] = jax.device_put(arr, sh[key])
+        else:
+            out[key] = jax.device_put(arr)
+    restored = jax.tree_util.tree_unflatten(
+        treedef, [out[k] for k in flat_paths])
+    return restored, step, meta
+
+
+def prune(directory: str, keep: int = 3):
+    steps = available_steps(directory)
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s}"), ignore_errors=True)

@@ -1,0 +1,25 @@
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig, MLAConfig
+from repro.configs.shapes import SHAPES, ShapeConfig, get_shape, shape_applicable
+from repro.configs.registry import (
+    ARCH_IDS,
+    REDUCED_SHAPE,
+    cells,
+    get_config,
+    reduced_config,
+)
+
+__all__ = [
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "MLAConfig",
+    "SHAPES",
+    "ShapeConfig",
+    "get_shape",
+    "shape_applicable",
+    "ARCH_IDS",
+    "REDUCED_SHAPE",
+    "cells",
+    "get_config",
+    "reduced_config",
+]

@@ -1,0 +1,13 @@
+# ExpoCloud — the paper's contribution, reproduced faithfully:
+#   task.py / hardness.py   — AbstractTask, hardness partial order, min_hard
+#   server.py / client.py   — pull-model primary/backup protocol
+#   engine.py               — create/terminate/list engine abstraction
+#   sim.py                  — deterministic virtual-clock cloud simulator
+#   sweep.py                — ML-cell bridge (arch x shape x mesh tasks)
+from repro.core.hardness import Hardness, MinHardSet
+from repro.core.messages import Message, MsgType
+from repro.core.server import Server, ServerConfig
+from repro.core.task import AbstractTask
+
+__all__ = ["Hardness", "MinHardSet", "Message", "MsgType", "Server",
+           "ServerConfig", "AbstractTask"]

@@ -1,0 +1,191 @@
+"""The client (paper §"The clients").
+
+Main-loop actions per iteration (paper order):
+  1. send health update to the servers,
+  2. process worker events,
+  3. request tasks subject to idle workers (counting outstanding requests),
+  4. process messages from the primary (and dedup the backup's mirrors),
+  5. start workers for granted tasks,
+plus timeout enforcement (terminate + REPORT_HARD_TASK) and the domino
+effect.  Exits when NO_FURTHER_TASKS was received and all workers are done;
+sends BYE so the server can delete this instance (cost saving).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.hardness import Hardness
+from repro.core.messages import Message, MsgType
+from repro.core.workerpool import WorkerEvent
+
+
+class Client:
+    def __init__(self, name, primary_channel, backup_channel, pool, clock,
+                 handshake=None, health_interval: float = 1.0):
+        self.name = name
+        self.primary = primary_channel
+        self.backup = backup_channel
+        self.pool = pool
+        self.clock = clock
+        self.health_interval = health_interval
+        self._last_health = -1e18
+
+        self.tasks: dict[int, object] = {}     # tid -> task (granted)
+        self.queue: list[int] = []             # granted, not yet started
+        self.outstanding = 0                   # requested, not yet granted
+        self.no_further = False
+        self.stopped = False
+        self.finished = False
+
+        # two-copy dedup state
+        self._processed_srv_seqs: set[int] = set()
+        self._backup_buffer: list[Message] = []
+
+        if handshake is not None:
+            handshake.send(Message(MsgType.HANDSHAKE, self.name,
+                                   body={"kind": "client"}))
+
+    # ------------------------------------------------------------------
+    def send_to_servers(self, mtype, body=None):
+        msg = Message(mtype, self.name, body)
+        self.primary.send(msg)
+        if self.backup is not None:
+            self.backup.send(msg)    # the copy (same seq) for the backup
+
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        """One main-loop iteration; returns True when the client is done."""
+        now = self.clock()
+        # 1. health updates (sent even while STOPped — paper)
+        if now - self._last_health >= self.health_interval:
+            self.send_to_servers(MsgType.HEALTH_UPDATE)
+            self._last_health = now
+
+        # 2. worker events
+        for ev in self.pool.poll():
+            if ev.kind == WorkerEvent.STARTED:
+                self.send_to_servers(MsgType.LOG,
+                                     {"event": "started", "tid": ev.task_id})
+            elif ev.kind == WorkerEvent.DONE:
+                self.send_to_servers(MsgType.RESULT,
+                                     {"tid": ev.task_id, "result": ev.payload})
+                self.send_to_servers(MsgType.LOG,
+                                     {"event": "done", "tid": ev.task_id})
+                self.tasks.pop(ev.task_id, None)
+            elif ev.kind == WorkerEvent.ERROR:
+                self.send_to_servers(MsgType.EXCEPTION,
+                                     {"tid": ev.task_id, "error": ev.payload})
+                self.tasks.pop(ev.task_id, None)
+
+        # 6 (interleaved). timeout enforcement
+        for tid, t0 in list(self.pool.running().items()):
+            task = self.tasks.get(tid)
+            if task is None:
+                continue
+            deadline = task.timeout()
+            if deadline is not None and now - t0 > deadline:
+                self.pool.terminate(tid)
+                self.tasks.pop(tid, None)
+                self.send_to_servers(
+                    MsgType.REPORT_HARD_TASK,
+                    {"tid": tid, "hardness": task.hardness().values})
+                self.send_to_servers(MsgType.LOG,
+                                     {"event": "timeout", "tid": tid})
+
+        # 3. request tasks
+        if not self.stopped and not self.no_further:
+            want = self.pool.idle() - self.outstanding - len(self.queue)
+            if want > 0:
+                self.send_to_servers(MsgType.REQUEST_TASKS, {"n": want})
+                self.outstanding += want
+
+        # 4. process messages
+        while True:
+            msg = self.primary.poll()
+            if msg is None:
+                break
+            self._act(msg)
+        if self.backup is not None:
+            while True:
+                msg = self.backup.poll()
+                if msg is None:
+                    break
+                self._buffer_backup(msg)
+
+        # 5. start workers
+        if not self.stopped:
+            while self.queue and self.pool.idle() > 0:
+                tid = self.queue.pop(0)
+                if tid in self.tasks:
+                    self.pool.start(tid, self.tasks[tid])
+
+        # exit condition
+        if self.no_further and not self.queue and not self.tasks \
+                and not self.pool.running() and not self.finished:
+            self.send_to_servers(MsgType.BYE)
+            self.finished = True
+        return self.finished
+
+    def run(self, poll_sleep: float = 0.02):
+        while not self.step():
+            time.sleep(poll_sleep)
+        self.pool.shutdown()
+
+    # ------------------------------------------------------------------
+    def _buffer_backup(self, msg: Message):
+        if msg.type == MsgType.SWAP_QUEUES:
+            # arrives on the backup-turned-primary path too; handle directly
+            self._act(msg)
+            return
+        if msg.srv_seq is not None and msg.srv_seq in self._processed_srv_seqs:
+            return  # mirror of an already-processed primary message: pop
+        self._backup_buffer.append(msg)
+
+    def _act(self, msg: Message):
+        if msg.srv_seq is not None:
+            if msg.srv_seq in self._processed_srv_seqs:
+                return
+            self._processed_srv_seqs.add(msg.srv_seq)
+            # pop any buffered mirror of this message
+            self._backup_buffer = [
+                m for m in self._backup_buffer
+                if m.srv_seq != msg.srv_seq]
+        t = msg.type
+        if t == MsgType.GRANT_TASKS:
+            granted = msg.body["tasks"]   # list[(tid, task)]
+            self.outstanding = max(0, self.outstanding - len(granted))
+            for tid, task in granted:
+                self.tasks[tid] = task
+                self.queue.append(tid)
+            self.send_to_servers(
+                MsgType.LOG, {"event": "granted",
+                              "tids": [tid for tid, _ in granted]})
+        elif t == MsgType.NO_FURTHER_TASKS:
+            self.no_further = True
+            self.outstanding = 0
+        elif t == MsgType.APPLY_DOMINO_EFFECT:
+            h = Hardness(tuple(msg.body["hardness"]))
+            for tid in list(self.pool.running()):
+                task = self.tasks.get(tid)
+                if task is not None and task.hardness().geq(h):
+                    self.pool.terminate(tid)
+                    self.tasks.pop(tid, None)
+                    self.send_to_servers(
+                        MsgType.LOG, {"event": "dominoed", "tid": tid})
+            for tid in list(self.queue):
+                task = self.tasks.get(tid)
+                if task is not None and task.hardness().geq(h):
+                    self.queue.remove(tid)
+                    self.tasks.pop(tid, None)
+        elif t == MsgType.STOP:
+            self.stopped = True
+        elif t == MsgType.RESUME:
+            self.stopped = False
+        elif t == MsgType.SWAP_QUEUES:
+            # the backup became the primary: swap the channel pair and
+            # process the backup's buffered (unmatched) messages in order
+            if self.backup is not None:
+                self.primary = self.backup
+            buffered, self._backup_buffer = self._backup_buffer, []
+            for m in sorted(buffered, key=lambda m: (m.srv_seq or 0)):
+                self._act(m)

@@ -1,0 +1,64 @@
+"""Task hardness — the paper's pruning data structures.
+
+A task's hardness is a tuple of parameter values that correlate with
+execution time.  The default comparison (paper, AbstractTask): T1 is as
+hard or harder than T2 iff *all* hardness parameters of T1 are >= the
+corresponding parameters of T2 — a componentwise partial order.
+
+``MinHardSet`` is the paper's ``min_hard`` list: the set of hardnesses of
+timed-out tasks, "kept small by only storing the minimal elements" — i.e. a
+Pareto-minimal antichain.  A task is disqualified iff its hardness
+dominates (>=) any stored element.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Hardness:
+    values: tuple
+
+    def geq(self, other: "Hardness") -> bool:
+        """self as hard or harder than other (componentwise >=)."""
+        assert len(self.values) == len(other.values), "incomparable arities"
+        return all(a >= b for a, b in zip(self.values, other.values))
+
+    def __le__(self, other):
+        return other.geq(self)
+
+    def __ge__(self, other):
+        return self.geq(other)
+
+
+class MinHardSet:
+    """Pareto-minimal antichain of timed-out hardnesses."""
+
+    def __init__(self):
+        self._items: list[Hardness] = []
+
+    def __len__(self):
+        return len(self._items)
+
+    def __iter__(self):
+        return iter(self._items)
+
+    def add(self, h: Hardness) -> bool:
+        """Insert h; keep only minimal elements. Returns True if h was
+        retained (i.e. it was not already dominated-from-below)."""
+        for m in self._items:
+            if h.geq(m):        # an existing element is already <= h
+                return False
+        self._items = [m for m in self._items if not m.geq(h)]
+        self._items.append(h)
+        return True
+
+    def disqualifies(self, h: Hardness) -> bool:
+        """True iff h is as hard or harder than some timed-out hardness."""
+        return any(h.geq(m) for m in self._items)
+
+    def snapshot(self) -> list[tuple]:
+        return [m.values for m in self._items]
+
+    def restore(self, values: list[tuple]):
+        self._items = [Hardness(tuple(v)) for v in values]

@@ -1,0 +1,49 @@
+"""Protocol messages (names follow the paper exactly)."""
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+
+
+class MsgType(enum.Enum):
+    # client/backup -> primary
+    HEALTH_UPDATE = "HEALTH_UPDATE"
+    REQUEST_TASKS = "REQUEST_TASKS"
+    RESULT = "RESULT"
+    REPORT_HARD_TASK = "REPORT_HARD_TASK"
+    LOG = "LOG"
+    EXCEPTION = "EXCEPTION"
+    BYE = "BYE"
+    # primary -> client
+    GRANT_TASKS = "GRANT_TASKS"
+    NO_FURTHER_TASKS = "NO_FURTHER_TASKS"
+    APPLY_DOMINO_EFFECT = "APPLY_DOMINO_EFFECT"
+    STOP = "STOP"
+    RESUME = "RESUME"
+    SWAP_QUEUES = "SWAP_QUEUES"
+    # primary <-> backup coordination
+    NEW_CLIENT = "NEW_CLIENT"
+    CLIENT_TERMINATED = "CLIENT_TERMINATED"
+    FORWARD = "FORWARD"           # copy of a client message, primary->backup
+    # instance -> server bootstrap
+    HANDSHAKE = "HANDSHAKE"
+
+
+_seq = itertools.count()
+
+
+@dataclass
+class Message:
+    type: MsgType
+    sender: str
+    body: object = None
+    seq: int = field(default_factory=lambda: next(_seq))
+    # server->client messages carry a per-client logical counter so clients
+    # can dedup the primary's message against the backup's mirror of it
+    srv_seq: int | None = None
+
+    def key(self):
+        """Dedup key for the two-copy delivery protocol (client->server
+        copies share the same Message.seq)."""
+        return (self.sender, self.seq)

@@ -1,0 +1,99 @@
+"""Results table (GROUP-BY retention, original task order) + client event
+logs — the paper's "output folder" contents.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import os
+from dataclasses import dataclass, field
+
+
+class EventLog:
+    def __init__(self):
+        self._events: dict[str, list] = {}
+
+    def ensure(self, client: str):
+        self._events.setdefault(client, [])
+
+    def log(self, client: str, t: float, kind: str, body):
+        self._events.setdefault(client, []).append(
+            {"t": t, "kind": kind, "body": body})
+
+    def snapshot(self):
+        return {c: list(v) for c, v in self._events.items()}
+
+    def restore(self, snap):
+        self._events = {c: list(v) for c, v in snap.items()}
+
+    def for_client(self, client: str) -> list:
+        return list(self._events.get(client, []))
+
+    def write(self, out_dir: str):
+        for client, events in self._events.items():
+            d = os.path.join(out_dir, client)
+            os.makedirs(d, exist_ok=True)
+            with open(os.path.join(d, "events.jsonl"), "w") as f:
+                for e in events:
+                    f.write(json.dumps(e, default=str) + "\n")
+
+
+@dataclass
+class ResultsTable:
+    parameter_titles: tuple
+    result_titles: tuple
+    rows: list                      # [(params, result, status)]
+    dropped_groups: list = field(default_factory=list)
+
+    @classmethod
+    def build(cls, tasks, original_index, status, results,
+              min_group_size: int = 0) -> "ResultsTable":
+        if not tasks:
+            return cls((), (), [])
+        # group retention: a group is kept if #solved >= min_group_size
+        solved_per_group = collections.Counter()
+        for tid, task in enumerate(tasks):
+            if tid in results:
+                solved_per_group[task.group_key()] += 1
+        dropped = set()
+        if min_group_size > 0:
+            for tid, task in enumerate(tasks):
+                gk = task.group_key()
+                if solved_per_group[gk] < min_group_size:
+                    dropped.add(gk)
+        # restore original order (paper: prior to printing results)
+        by_original = sorted(range(len(tasks)),
+                             key=lambda i: original_index[i])
+        rows = []
+        for tid in by_original:
+            task = tasks[tid]
+            if min_group_size > 0 and task.group_key() in dropped:
+                continue
+            rows.append((task.parameters(), results.get(tid),
+                         status[tid]))
+        return cls(
+            parameter_titles=tasks[0].parameter_titles(),
+            result_titles=tasks[0].result_titles(),
+            rows=rows,
+            dropped_groups=sorted(dropped),
+        )
+
+    # ------------------------------------------------------------------
+    def solved_rows(self):
+        return [(p, r) for p, r, s in self.rows if r is not None]
+
+    def to_csv(self) -> str:
+        header = ",".join(map(str, self.parameter_titles + self.result_titles
+                              + ("status",)))
+        lines = [header]
+        for params, result, status in self.rows:
+            res = result if result is not None else ("",) * len(
+                self.result_titles)
+            lines.append(",".join(map(str, tuple(params) + tuple(res)
+                                      + (status,))))
+        return "\n".join(lines)
+
+    def write(self, out_dir: str):
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, "results.csv"), "w") as f:
+            f.write(self.to_csv() + "\n")

@@ -1,0 +1,577 @@
+"""The primary (and backup) server — the paper's core loop.
+
+Task bookkeeping follows the paper exactly:
+  * ``tasks``            — sorted non-decreasing hardness (lexicographic
+                           order on the hardness tuple is a linear extension
+                           of the componentwise partial order),
+  * ``tasks_from_failed``— indices assigned to a failed client, re-assigned
+                           with priority,
+  * ``min_hard``         — Pareto-minimal antichain of timed-out hardnesses.
+
+run-loop actions (paper §"The primary server" b):
+  1. health update to the backup,
+  2. handshakes from new instances,
+  3. client messages (each forwarded to the backup),
+  4. instance creation (backup precedence; exponential backoff),
+  5. terminate unhealthy instances (+ reassign their tasks),
+  6. output results when everything is done.
+
+The same class runs as the backup server: it consumes the primary's
+FORWARDed copies (popping the clients' direct copies), mirrors the
+primary's replies on the backup channels, and takes over on primary
+silence (SWAP_QUEUES + dangling-instance cleanup).
+"""
+from __future__ import annotations
+
+import pickle
+from dataclasses import dataclass, field
+
+from repro.core.hardness import Hardness, MinHardSet
+from repro.core.messages import Message, MsgType
+from repro.core.results import EventLog, ResultsTable
+
+
+@dataclass
+class ServerConfig:
+    min_group_size: int = 0
+    max_task_attempts: int = 3      # poison-task cap (beyond-paper)
+    use_backup: bool = False
+    max_clients: int = 4
+    workers_hint: int = 1              # informational; pools size themselves
+    health_update_limit: float = 10.0
+    instance_max_non_active_time: float = 30.0
+    create_backoff_init: float = 0.5
+    create_backoff_max: float = 30.0
+    health_interval: float = 1.0
+    out_dir: str | None = None
+
+
+@dataclass
+class ClientInfo:
+    name: str
+    endpoint: object
+    last_health: float
+    srv_seq: int = 0                    # per-client logical send counter
+    last_client_seq: int = -1           # highest processed client msg seq
+    assigned: dict = field(default_factory=dict)   # tid -> task
+
+
+# task status values
+PENDING, ASSIGNED, DONE, TIMED_OUT, PRUNED, FAILED_POOL = (
+    "pending", "assigned", "done", "timed_out", "pruned", "failed_pool")
+
+
+class Server:
+    def __init__(self, tasks, engine, config: ServerConfig | None = None,
+                 name: str = "primary", role: str = "primary"):
+        self.engine = engine
+        self.config = config or ServerConfig()
+        self.name = name
+        self.role = role
+
+        order = sorted(range(len(tasks)),
+                       key=lambda i: tuple(tasks[i].hardness().values))
+        self.tasks = [tasks[i] for i in order]        # hardness-sorted
+        self.original_index = order                    # sorted pos -> orig pos
+        self.status = [PENDING] * len(tasks)
+        self.next_ptr = 0
+        self.tasks_from_failed: list[int] = []
+        self.min_hard = MinHardSet()
+        self.results: dict[int, tuple] = {}
+        self.attempts: dict[int, int] = {}
+
+        self.clients: dict[str, ClientInfo] = {}
+        self.events = EventLog()
+        self.done = False
+        self.final_results: ResultsTable | None = None
+
+        # backup coordination
+        self.backup_endpoint = None          # primary's channel to backup
+        self.backup_name = None
+        self.backup_last_health = None
+        self.backup_pending = False
+        self.frozen = False
+        self.primary_endpoint = None         # backup's channel to primary
+        self.primary_last_health = None
+        self._direct_buffer: dict[str, list[Message]] = {}
+
+        # instance creation backoff
+        self._next_create_at = 0.0
+        self._backoff = self.config.create_backoff_init
+        self._client_counter = 0
+        self._instance_birth: dict[str, float] = {}
+
+    # ------------------------------------------------------------------
+    def now(self) -> float:
+        return self.engine.now()
+
+    def send_to_client(self, ci: ClientInfo, mtype, body=None):
+        msg = Message(mtype, self.name, body, srv_seq=ci.srv_seq)
+        ci.srv_seq += 1
+        ci.endpoint.send(msg)
+
+    # ------------------------------------------------------------------
+    # task assignment (paper §a)
+    # ------------------------------------------------------------------
+    def _next_tasks(self, n: int) -> list[tuple[int, object]]:
+        out = []
+        while self.tasks_from_failed and len(out) < n:
+            tid = self.tasks_from_failed.pop(0)
+            if self.status[tid] != FAILED_POOL:
+                continue
+            if self.min_hard.disqualifies(self.tasks[tid].hardness()):
+                self.status[tid] = PRUNED
+                continue
+            out.append((tid, self.tasks[tid]))
+        while self.next_ptr < len(self.tasks) and len(out) < n:
+            tid = self.next_ptr
+            self.next_ptr += 1
+            if self.status[tid] != PENDING:
+                continue
+            if self.min_hard.disqualifies(self.tasks[tid].hardness()):
+                self.status[tid] = PRUNED
+                continue
+            out.append((tid, self.tasks[tid]))
+        return out
+
+    def _has_assignable(self) -> bool:
+        if any(self.status[t] == FAILED_POOL for t in self.tasks_from_failed):
+            return True
+        for tid in range(self.next_ptr, len(self.tasks)):
+            if self.status[tid] == PENDING \
+                    and not self.min_hard.disqualifies(
+                        self.tasks[tid].hardness()):
+                return True
+        return False
+
+    # ------------------------------------------------------------------
+    # message handling (paper §c)
+    # ------------------------------------------------------------------
+    def process_client_message(self, msg: Message):
+        cname = msg.sender
+        ci = self.clients.get(cname)
+        if ci is None:
+            return
+        ci.last_client_seq = max(ci.last_client_seq, msg.seq)
+        t = msg.type
+        if t == MsgType.HEALTH_UPDATE:
+            ci.last_health = self.now()
+        elif t == MsgType.REQUEST_TASKS:
+            granted = self._next_tasks(msg.body["n"])
+            if granted:
+                for tid, task in granted:
+                    self.status[tid] = ASSIGNED
+                    ci.assigned[tid] = task
+                self.send_to_client(ci, MsgType.GRANT_TASKS,
+                                    {"tasks": granted})
+            else:
+                self.send_to_client(ci, MsgType.NO_FURTHER_TASKS)
+        elif t == MsgType.RESULT:
+            tid = msg.body["tid"]
+            self.results[tid] = tuple(msg.body["result"])
+            self.status[tid] = DONE
+            ci.assigned.pop(tid, None)
+        elif t == MsgType.REPORT_HARD_TASK:
+            tid = msg.body["tid"]
+            h = Hardness(tuple(msg.body["hardness"]))
+            self.status[tid] = TIMED_OUT
+            ci.assigned.pop(tid, None)
+            self.min_hard.add(h)
+            self._apply_domino(h)
+            for other in self.clients.values():
+                self.send_to_client(other, MsgType.APPLY_DOMINO_EFFECT,
+                                    {"hardness": h.values})
+        elif t == MsgType.LOG:
+            self.events.log(cname, self.now(), "LOG", msg.body)
+        elif t == MsgType.EXCEPTION:
+            self.events.log(cname, self.now(), "EXCEPTION", msg.body)
+            tid = (msg.body or {}).get("tid")
+            if tid is not None and self.status[tid] == ASSIGNED:
+                ci.assigned.pop(tid, None)
+                self.attempts[tid] = self.attempts.get(tid, 1) + 1
+                if self.attempts[tid] > self.config.max_task_attempts:
+                    # poison task: stop retrying (would livelock otherwise)
+                    self.status[tid] = PRUNED
+                else:
+                    # worker crash: send the task back to the pool
+                    self.status[tid] = FAILED_POOL
+                    self.tasks_from_failed.append(tid)
+        elif t == MsgType.BYE:
+            self.events.log(cname, self.now(), "LOG", {"event": "bye"})
+            self._drop_client(cname, terminate_instance=True)
+
+    def _apply_domino(self, h: Hardness):
+        """Mark all assigned/pending tasks dominated by h as pruned (their
+        clients are terminating them; results will never arrive)."""
+        for ci in self.clients.values():
+            for tid in list(ci.assigned):
+                if self.tasks[tid].hardness().geq(h):
+                    if self.status[tid] == ASSIGNED:
+                        self.status[tid] = PRUNED
+                    ci.assigned.pop(tid, None)
+
+    def _drop_client(self, cname: str, terminate_instance: bool,
+                     reassign: bool = False):
+        ci = self.clients.pop(cname, None)
+        if ci is None:
+            return
+        if reassign:
+            for tid in ci.assigned:
+                if self.status[tid] == ASSIGNED:
+                    self.status[tid] = FAILED_POOL
+                    self.tasks_from_failed.append(tid)
+        if terminate_instance and self.role == "primary":
+            self.engine.terminate_instance(cname)
+        if self.role == "primary" and self.backup_endpoint is not None:
+            self.backup_endpoint.send(
+                Message(MsgType.CLIENT_TERMINATED, self.name,
+                        {"name": cname}))
+
+    # ------------------------------------------------------------------
+    # the run loop (paper §b)
+    # ------------------------------------------------------------------
+    def step(self):
+        if self.role == "primary":
+            self._step_primary()
+        else:
+            self._step_backup()
+
+    def _step_primary(self):
+        now = self.now()
+        # 1. health update to the backup
+        if self.backup_endpoint is not None:
+            self.backup_endpoint.send(
+                Message(MsgType.HEALTH_UPDATE, self.name))
+
+        # 2. handshakes (while frozen, only the backup's handshake is
+        #    accepted — client handshakes are deferred, per the paper's
+        #    "stops accepting handshake requests from new client instances")
+        self._handle_handshakes()
+        # poll backup health
+        if self.backup_endpoint is not None:
+            while True:
+                m = self.backup_endpoint.poll()
+                if m is None:
+                    break
+                if m.type == MsgType.HEALTH_UPDATE:
+                    self.backup_last_health = now
+
+        # 3. client messages (deferred entirely while frozen so the backup
+        #    snapshot + forwarded stream is a consistent replay)
+        if not self.frozen:
+            for cname in list(self.clients):
+                ci = self.clients.get(cname)
+                if ci is None:
+                    continue
+                while True:
+                    msg = ci.endpoint.poll()
+                    if msg is None:
+                        break
+                    if self.backup_endpoint is not None:
+                        self.backup_endpoint.send(
+                            Message(MsgType.FORWARD, self.name,
+                                    {"msg": msg}))
+                    self.process_client_message(msg)
+
+        # 4. instance creation
+        self._maybe_create_instance(now)
+
+        # 5. terminate unhealthy instances
+        self._terminate_unhealthy(now)
+
+        # 6. results
+        self._check_done()
+
+    def _handle_handshakes(self):
+        todo = getattr(self, "_deferred_handshakes", [])
+        self._deferred_handshakes = []
+        while True:
+            msg = self.engine.handshake_recv.poll()
+            if msg is None:
+                break
+            todo.append(msg)
+        for msg in todo:
+            if msg.type != MsgType.HANDSHAKE:
+                continue
+            kind = msg.body["kind"]
+            name = msg.sender
+            if self.frozen and kind == "client":
+                self._deferred_handshakes.append(msg)  # handled post-thaw
+                continue
+            pending = self.engine.pending.pop(name, None)
+            if pending is None:
+                continue
+            if kind == "client":
+                ci = ClientInfo(name, pending.primary_side, self.now())
+                self.clients[name] = ci
+                self.events.ensure(name)
+                if self.backup_endpoint is not None:
+                    self.backup_endpoint.send(
+                        Message(MsgType.NEW_CLIENT, self.name,
+                                {"name": name, "srv_seq": ci.srv_seq,
+                                 "last_client_seq": ci.last_client_seq}))
+            elif kind == "backup":
+                self.backup_endpoint = pending.primary_side
+                self.backup_name = name
+                self.backup_last_health = self.now()
+                self.backup_pending = False
+                # register existing clients with the new backup
+                for cname, ci in self.clients.items():
+                    self.backup_endpoint.send(
+                        Message(MsgType.NEW_CLIENT, self.name,
+                                {"name": cname, "srv_seq": ci.srv_seq,
+                                 "last_client_seq": ci.last_client_seq}))
+                # unfreeze: clients may resume
+                for ci in self.clients.values():
+                    self.send_to_client(ci, MsgType.RESUME)
+                self.frozen = False
+
+    def _maybe_create_instance(self, now):
+        if now < self._next_create_at:
+            return
+        from repro.core.engine import RateLimited
+
+        try:
+            if self.config.use_backup and self.backup_endpoint is None \
+                    and not self.backup_pending:
+                # freeze the world, snapshot, create the backup (paper §a)
+                self.frozen = True
+                for ci in self.clients.values():
+                    self.send_to_client(ci, MsgType.STOP)
+                snapshot = self.serialize_state()
+                name = f"backup-{self._client_counter}"
+                self._client_counter += 1
+                self.engine.create_instance("backup", name, payload=snapshot)
+                self.backup_pending = True
+                self._instance_birth[name] = now
+            elif self._has_assignable() \
+                    and len(self.clients) + len(self.engine.pending) \
+                    < self.config.max_clients:
+                name = f"client-{self._client_counter}"
+                self._client_counter += 1
+                self.engine.create_instance("client", name)
+                self._instance_birth[name] = now
+            else:
+                return
+            self._backoff = self.config.create_backoff_init
+            self._next_create_at = now + self._backoff
+        except RateLimited:
+            self._backoff = min(self._backoff * 2,
+                                self.config.create_backoff_max)
+            self._next_create_at = now + self._backoff
+            if self.frozen and self.backup_pending is False:
+                # failed to even create the backup: unfreeze and retry later
+                for ci in self.clients.values():
+                    self.send_to_client(ci, MsgType.RESUME)
+                self.frozen = False
+
+    def _terminate_unhealthy(self, now):
+        limit = self.config.health_update_limit
+        for cname, ci in list(self.clients.items()):
+            if now - ci.last_health > limit:
+                self.events.log(cname, now, "LOG", {"event": "unhealthy"})
+                self.engine.terminate_instance(cname)
+                self._drop_client(cname, terminate_instance=False,
+                                  reassign=True)
+        # pending instances that never handshook
+        max_na = self.config.instance_max_non_active_time
+        for name, pending in list(self.engine.pending.items()):
+            if now - pending.created_at > max_na:
+                self.engine.terminate_instance(name)
+                self.engine.pending.pop(name, None)
+                if pending.kind == "backup":
+                    self.backup_pending = False
+                    if self.frozen:
+                        for ci in self.clients.values():
+                            self.send_to_client(ci, MsgType.RESUME)
+                        self.frozen = False
+        # backup health
+        if self.backup_endpoint is not None \
+                and self.backup_last_health is not None \
+                and now - self.backup_last_health > limit:
+            self.engine.terminate_instance(self.backup_name)
+            self.backup_endpoint = None
+            self.backup_name = None
+            self.backup_last_health = None
+
+    def _check_done(self):
+        if self.done:
+            return
+        active = any(s in (ASSIGNED,) for s in self.status)
+        if active or self._has_assignable():
+            return
+        # no assignable work, nothing in flight: sweep survivors
+        for tid, s in enumerate(self.status):
+            if s in (PENDING, FAILED_POOL):
+                self.status[tid] = PRUNED
+        self.done = True
+        self.final_results = self.output_results()
+        if self.config.out_dir:
+            self.final_results.write(self.config.out_dir)
+            self.events.write(self.config.out_dir)
+
+    # ------------------------------------------------------------------
+    def output_results(self) -> ResultsTable:
+        return ResultsTable.build(
+            tasks=self.tasks,
+            original_index=self.original_index,
+            status=self.status,
+            results=self.results,
+            min_group_size=self.config.min_group_size,
+        )
+
+    # ------------------------------------------------------------------
+    # backup-server machinery (paper §fault tolerance)
+    # ------------------------------------------------------------------
+    def serialize_state(self) -> bytes:
+        return pickle.dumps({
+            "tasks": self.tasks,
+            "original_index": self.original_index,
+            "status": self.status,
+            "next_ptr": self.next_ptr,
+            "tasks_from_failed": self.tasks_from_failed,
+            "min_hard": self.min_hard.snapshot(),
+            "results": self.results,
+            "clients": {c: (ci.srv_seq, ci.last_client_seq)
+                        for c, ci in self.clients.items()},
+            "config": self.config,
+            "events": self.events.snapshot(),
+        })
+
+    @classmethod
+    def from_snapshot(cls, blob: bytes, engine, name: str = "backup"):
+        st = pickle.loads(blob)
+        srv = cls.__new__(cls)
+        srv.engine = engine
+        srv.config = st["config"]
+        srv.name = name
+        srv.role = "backup"
+        srv.tasks = st["tasks"]
+        srv.original_index = st["original_index"]
+        srv.status = st["status"]
+        srv.next_ptr = st["next_ptr"]
+        srv.tasks_from_failed = list(st["tasks_from_failed"])
+        srv.min_hard = MinHardSet()
+        srv.min_hard.restore(st["min_hard"])
+        srv.results = dict(st["results"])
+        srv.clients = {}
+        srv._snapshot_clients = st["clients"]
+        srv.events = EventLog()
+        srv.events.restore(st["events"])
+        srv.done = False
+        srv.final_results = None
+        srv.backup_endpoint = None
+        srv.backup_name = None
+        srv.backup_last_health = None
+        srv.backup_pending = False
+        srv.frozen = False
+        srv.primary_endpoint = None
+        srv.primary_last_health = None
+        srv._direct_buffer = {}
+        srv._next_create_at = 0.0
+        srv._backoff = srv.config.create_backoff_init
+        srv._client_counter = 10_000   # avoid name collisions with primary
+        srv._instance_birth = {}
+        return srv
+
+    def backup_bootstrap(self, primary_endpoint, handshake_send):
+        """assume_backup_role: connect to the primary, register clients'
+        backup channels, handshake."""
+        self.primary_endpoint = primary_endpoint
+        self.primary_last_health = self.now()
+        for cname, (srv_seq, last_seq) in self._snapshot_clients.items():
+            ep = self.engine.backup_endpoint(cname)
+            ci = ClientInfo(cname, ep, self.now(), srv_seq=srv_seq,
+                            last_client_seq=last_seq)
+            self.clients[cname] = ci
+            self._direct_buffer.setdefault(cname, [])
+        handshake_send.send(Message(MsgType.HANDSHAKE, self.name,
+                                    body={"kind": "backup"}))
+
+    def _step_backup(self):
+        now = self.now()
+        # health to primary
+        self.primary_endpoint.send(Message(MsgType.HEALTH_UPDATE, self.name))
+        # messages from the primary
+        while True:
+            m = self.primary_endpoint.poll()
+            if m is None:
+                break
+            if m.type == MsgType.HEALTH_UPDATE:
+                self.primary_last_health = now
+            elif m.type == MsgType.FORWARD:
+                inner: Message = m.body["msg"]
+                self._pop_direct(inner)
+                self.process_client_message(inner)
+            elif m.type == MsgType.NEW_CLIENT:
+                b = m.body
+                ep = self.engine.backup_endpoint(b["name"])
+                self.clients[b["name"]] = ClientInfo(
+                    b["name"], ep, now, srv_seq=b["srv_seq"],
+                    last_client_seq=b["last_client_seq"])
+                self._direct_buffer.setdefault(b["name"], [])
+                self.events.ensure(b["name"])
+            elif m.type == MsgType.CLIENT_TERMINATED:
+                self.clients.pop(m.body["name"], None)
+                self._direct_buffer.pop(m.body["name"], None)
+        # direct copies from clients -> buffer
+        for cname, ci in list(self.clients.items()):
+            while True:
+                m = ci.endpoint.poll()
+                if m is None:
+                    break
+                if m.seq <= ci.last_client_seq:
+                    continue  # processed by primary before the snapshot
+                self._direct_buffer.setdefault(cname, []).append(m)
+                if m.type == MsgType.HEALTH_UPDATE:
+                    ci.last_health = now
+        # primary failure -> take over
+        if now - self.primary_last_health > self.config.health_update_limit:
+            self._take_over()
+
+    def _pop_direct(self, inner: Message):
+        buf = self._direct_buffer.get(inner.sender)
+        if not buf:
+            return
+        self._direct_buffer[inner.sender] = [
+            m for m in buf if m.key() != inner.key()]
+
+    def _take_over(self):
+        """The backup becomes the primary (paper §c)."""
+        self.role = "primary"
+        self.name = "primary*"
+        # swap queues on every client via their (old) primary channels
+        for cname, ci in self.clients.items():
+            ep = self.engine.primary_endpoints(cname)
+            if ep is not None:
+                ep.send(Message(MsgType.SWAP_QUEUES, self.name))
+        # process buffered direct messages in order
+        for cname in list(self._direct_buffer):
+            ci = self.clients.get(cname)
+            if ci is None:
+                continue
+            for m in sorted(self._direct_buffer.pop(cname, []),
+                            key=lambda m: m.seq):
+                self.process_client_message(m)
+        # dangling-instance cleanup: delete instances with no client object
+        known = set(self.clients) | {self.name}
+        for iname in self.engine.list_instances():
+            if iname not in known and not iname.startswith("backup"):
+                self.engine.terminate_instance(iname)
+        self.backup_endpoint = None
+        self.backup_name = None
+        self.backup_pending = False
+
+    # ------------------------------------------------------------------
+    def run(self, poll_sleep: float = 0.02, stop_when_done: bool = True):
+        """Drive the loop with the engine's real clock (LocalEngine/GCE).
+        The paper keeps servers alive after results are output; callers who
+        want that behaviour pass stop_when_done=False and stop externally.
+        """
+        import time as _t
+
+        while True:
+            self.step()
+            if self.done and stop_when_done:
+                return self.final_results
+            _t.sleep(poll_sleep)

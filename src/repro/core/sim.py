@@ -1,0 +1,279 @@
+"""Deterministic cloud simulator (virtual clock).
+
+The paper's local engine "is actually a simulation of performing the
+experiment on the cloud ... a powerful tool to facilitate further
+development".  We take that seriously: ``SimEngine`` runs the *same*
+Server/Client protocol code as the real engines, but on a virtual clock
+with scripted instance-creation delays, rate limits, message latency and
+failure injection — so the fault-tolerance protocol (backup mirroring,
+takeover, task reassignment, domino effect) is unit-testable and
+benchmarkable with exact reproducibility.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+
+from repro.core import transport
+from repro.core.client import Client
+from repro.core.engine import AbstractEngine, PendingInstance, RateLimited
+from repro.core.messages import Message, MsgType
+from repro.core.server import Server, ServerConfig
+from repro.core.task import AbstractTask
+from repro.core.workerpool import SimWorkerPool
+
+
+class Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def now(self) -> float:
+        return self.t
+
+    def advance(self, dt: float):
+        self.t += dt
+
+
+@dataclass
+class SimParams:
+    creation_delay: float = 2.0        # VM boot time
+    min_create_interval: float = 0.5   # platform rate limit
+    client_workers: int = 4            # CPUs per client instance
+    latency: float = 0.01              # message latency
+    dt: float = 0.05                   # step size
+    cost_per_instance_second: float = 1.0
+
+
+class SimEngine(AbstractEngine):
+    def __init__(self, clock: Clock, params: SimParams | None = None):
+        self.clock = clock
+        self.params = params or SimParams()
+        self.pending: dict[str, PendingInstance] = {}
+        self.nodes: dict[str, object] = {}      # name -> Client|Server
+        self.alive: dict[str, bool] = {}
+        self._instances: dict[str, float] = {}  # name -> created_at (billing)
+        self._stopped_at: dict[str, float] = {}
+        self._to_create: list = []              # (t, kind, name, payload)
+        self._last_create = -1e18
+        self._primary_eps: dict[str, transport.SimEndpoint] = {}
+        self._backup_eps: dict[str, transport.SimEndpoint] = {}
+        self._client_eps: dict[str, tuple] = {}
+        hs_srv, hs_cli = transport.sim_link(clock, self.params.latency)
+        self.handshake_recv = hs_srv
+        self._handshake_send = hs_cli
+        self.cost_log: list = []                # (name, start, end)
+
+    # ------------------------------------------------------------------
+    def now(self) -> float:
+        return self.clock.now()
+
+    def create_instance(self, kind, name, payload=None):
+        now = self.now()
+        if now - self._last_create < self.params.min_create_interval:
+            raise RateLimited()
+        self._last_create = now
+        heapq.heappush(self._to_create,
+                       (now + self.params.creation_delay, kind, name, payload))
+
+    def terminate_instance(self, name):
+        self.nodes.pop(name, None)
+        self.alive.pop(name, None)
+        self.pending.pop(name, None)
+        if name in self._instances:
+            self.cost_log.append((name, self._instances.pop(name), self.now()))
+
+    def list_instances(self):
+        return list(self._instances)
+
+    def primary_endpoints(self, name):
+        return self._primary_eps.get(name)
+
+    def backup_endpoint(self, name):
+        return self._backup_eps.get(name)
+
+    # ------------------------------------------------------------------
+    def kill(self, name):
+        """Crash an instance: it stops stepping and its links go dark, but
+        it remains listed (the VM is still up and billing)."""
+        self.alive[name] = False
+        node = self.nodes.get(name)
+        if node is not None and isinstance(node, Client):
+            for ep in (node.primary, node.backup):
+                if isinstance(ep, transport.SimEndpoint):
+                    ep.brk()
+
+    def materialize_due(self):
+        now = self.now()
+        while self._to_create and self._to_create[0][0] <= now:
+            _, kind, name, payload = heapq.heappop(self._to_create)
+            if kind == "client":
+                p_srv, p_cli = transport.sim_link(self.clock,
+                                                  self.params.latency)
+                b_srv, b_cli = transport.sim_link(self.clock,
+                                                  self.params.latency)
+                self._primary_eps[name] = p_srv
+                self._backup_eps[name] = b_srv
+                pool = SimWorkerPool(self.params.client_workers, self.clock)
+                client = Client(name, p_cli, b_cli, pool,
+                                clock=self.clock.now,
+                                handshake=self._handshake_send)
+                self.nodes[name] = client
+                self.alive[name] = True
+                self._instances[name] = now
+                self.pending[name] = PendingInstance(
+                    name, kind, now, primary_side=p_srv, backup_side=b_srv)
+            elif kind == "backup":
+                pb_primary, pb_backup = transport.sim_link(
+                    self.clock, self.params.latency)
+                srv = Server.from_snapshot(payload, self, name)
+                srv.backup_bootstrap(primary_endpoint=pb_backup,
+                                     handshake_send=self._handshake_send)
+                self.nodes[name] = srv
+                self.alive[name] = True
+                self._instances[name] = now
+                self.pending[name] = PendingInstance(
+                    name, kind, now, primary_side=pb_primary)
+
+    def total_cost(self) -> float:
+        now = self.now()
+        cost = sum(end - start for _, start, end in self.cost_log)
+        cost += sum(now - start for start in self._instances.values())
+        return cost * self.params.cost_per_instance_second
+
+
+# ---------------------------------------------------------------------------
+# the harness
+# ---------------------------------------------------------------------------
+class SimCluster:
+    """Primary server + engine on a shared virtual clock, with an event
+    script: ``at(t, fn)`` callbacks fire once when the clock passes t."""
+
+    def __init__(self, tasks, config: ServerConfig | None = None,
+                 params: SimParams | None = None):
+        self.clock = Clock()
+        self.params = params or SimParams()
+        self.engine = SimEngine(self.clock, self.params)
+        self.server = Server(tasks, self.engine, config)
+        self.engine._instances["primary"] = 0.0
+        self.engine.alive["primary"] = True
+        self._script: list = []   # (t, fn) sorted
+        self._primary_killed = False
+
+    def at(self, t: float, fn):
+        self._script.append((t, fn))
+        self._script.sort(key=lambda x: x[0])
+
+    def kill_primary(self):
+        self.engine.alive["primary"] = False
+        self._primary_killed = True
+
+    def clients(self) -> list[Client]:
+        return [n for n in self.engine.nodes.values()
+                if isinstance(n, Client)]
+
+    def servers(self) -> list[Server]:
+        out = []
+        if self.engine.alive.get("primary", False):
+            out.append(self.server)
+        out += [n for n in self.engine.nodes.values()
+                if isinstance(n, Server) and self.engine.alive.get(n.name if n.name in self.engine.alive else "", True)]
+        return out
+
+    def acting_primary(self) -> Server | None:
+        for n in self.engine.nodes.values():
+            if isinstance(n, Server) and n.role == "primary" \
+                    and self.engine.alive.get(_node_name(self.engine, n), True):
+                return n
+        if self.engine.alive.get("primary", False):
+            return self.server
+        return None
+
+    def step(self):
+        now = self.clock.now()
+        while self._script and self._script[0][0] <= now:
+            _, fn = self._script.pop(0)
+            fn(self)
+        self.engine.materialize_due()
+        if self.engine.alive.get("primary", False):
+            self.server.step()
+        for name, node in list(self.engine.nodes.items()):
+            if not self.engine.alive.get(name, False):
+                continue
+            node.step()
+        self.clock.advance(self.params.dt)
+
+    def run(self, until: float = 1e9, max_steps: int = 200_000,
+            stop_when_done: bool = True) -> Server:
+        """Steps until some acting primary reports done. Returns it."""
+        for _ in range(max_steps):
+            if self.clock.now() >= until:
+                break
+            self.step()
+            if stop_when_done:
+                prim = self._done_primary()
+                if prim is not None:
+                    return prim
+        prim = self._done_primary()
+        if prim is not None:
+            return prim
+        raise TimeoutError(
+            f"simulation did not finish by t={self.clock.now():.1f}")
+
+    def _done_primary(self):
+        if self.engine.alive.get("primary", False) and self.server.done:
+            return self.server
+        for name, node in self.engine.nodes.items():
+            if isinstance(node, Server) and node.role == "primary" \
+                    and self.engine.alive.get(name, False) and node.done:
+                return node
+        return None
+
+
+def _node_name(engine, node):
+    for k, v in engine.nodes.items():
+        if v is node:
+            return k
+    return ""
+
+
+# ---------------------------------------------------------------------------
+# scripted tasks for simulation
+# ---------------------------------------------------------------------------
+class SimTask(AbstractTask):
+    """A task with scripted virtual duration; run() returns its fields."""
+
+    def __init__(self, params: tuple, titles: tuple, hardness_values: tuple,
+                 sim_duration: float, deadline: float | None = None,
+                 result: tuple | None = None,
+                 group_titles: tuple | None = None):
+        self._params = tuple(params)
+        self._titles = tuple(titles)
+        self._hard = tuple(hardness_values)
+        self.sim_duration = sim_duration
+        self._deadline = deadline
+        self._result = result if result is not None else (sim_duration,)
+        self._group_titles = group_titles
+
+    def parameter_titles(self):
+        return self._titles
+
+    def parameters(self):
+        return self._params
+
+    def hardness_parameters(self):
+        return self._hard
+
+    def result_titles(self):
+        return ("value",) * len(self._result) if self._result else ("value",)
+
+    def run(self):
+        return self._result
+
+    def timeout(self):
+        return self._deadline
+
+    def group_parameter_titles(self):
+        if self._group_titles is not None:
+            return self._group_titles
+        return super().group_parameter_titles()

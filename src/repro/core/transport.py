@@ -1,0 +1,105 @@
+"""Transport abstraction under the server/client protocol.
+
+The paper uses two-way SyncManager queues; we keep that for the local
+engine (``MPTransport``) and add a deterministic in-memory transport for
+the simulator (``SimTransport``, driven by a virtual clock with optional
+latency and scripted link failures).  Server/client code only ever sees
+``Channel`` objects, so the *same* protocol code runs under both.
+"""
+from __future__ import annotations
+
+import collections
+import queue as _queue
+
+
+class Channel:
+    """One direction of a two-way link."""
+
+    def send(self, msg) -> None:
+        raise NotImplementedError
+
+    def poll(self):
+        """Non-blocking receive; returns a Message or None."""
+        raise NotImplementedError
+
+    def drain(self, limit: int = 1000) -> list:
+        out = []
+        for _ in range(limit):
+            m = self.poll()
+            if m is None:
+                break
+            out.append(m)
+        return out
+
+
+class Endpoint(Channel):
+    """A two-way channel end (send one way, poll the other)."""
+
+
+# ---------------------------------------------------------------------------
+# multiprocessing transport (LocalEngine)
+# ---------------------------------------------------------------------------
+class MPChannel(Channel):
+    def __init__(self, send_q, recv_q):
+        self._send = send_q
+        self._recv = recv_q
+
+    def send(self, msg):
+        self._send.put(msg)
+
+    def poll(self):
+        try:
+            return self._recv.get_nowait()
+        except (_queue.Empty, OSError, EOFError):
+            return None
+
+
+def mp_pipe(manager):
+    """Two-way channel pair over a multiprocessing.Manager."""
+    q1, q2 = manager.Queue(), manager.Queue()
+    return MPChannel(q1, q2), MPChannel(q2, q1)
+
+
+# ---------------------------------------------------------------------------
+# simulated transport (SimEngine)
+# ---------------------------------------------------------------------------
+class SimWire:
+    """One-directional wire with latency on a virtual clock."""
+
+    def __init__(self, clock, latency: float = 0.0):
+        self._clock = clock
+        self.latency = latency
+        self._q = collections.deque()   # (deliver_at, msg)
+        self.broken = False             # scripted link failure
+
+    def put(self, msg):
+        if self.broken:
+            return  # dropped, like a dead instance's socket
+        self._q.append((self._clock.now() + self.latency, msg))
+
+    def get(self):
+        if self._q and self._q[0][0] <= self._clock.now():
+            return self._q.popleft()[1]
+        return None
+
+
+class SimEndpoint(Endpoint):
+    def __init__(self, send_wire: SimWire, recv_wire: SimWire):
+        self._send = send_wire
+        self._recv = recv_wire
+
+    def send(self, msg):
+        self._send.put(msg)
+
+    def poll(self):
+        return self._recv.get()
+
+    def brk(self):
+        self._send.broken = True
+        self._recv.broken = True
+
+
+def sim_link(clock, latency: float = 0.0):
+    """Returns (endpoint_a, endpoint_b) — a two-way simulated link."""
+    ab, ba = SimWire(clock, latency), SimWire(clock, latency)
+    return SimEndpoint(ab, ba), SimEndpoint(ba, ab)

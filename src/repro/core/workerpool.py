@@ -1,0 +1,134 @@
+"""Worker pools: one worker per task (paper: "a client creates and manages
+worker processes; each worker is responsible for executing a single task").
+
+``ProcessWorkerPool`` uses real OS processes (LocalEngine / cloud clients);
+``SimWorkerPool`` executes tasks on the virtual clock using each task's
+``sim_duration`` attribute (deterministic tests/benchmarks).
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import queue as _queue
+import time
+import traceback
+
+
+class WorkerEvent:
+    STARTED = "WORKER_STARTED"
+    DONE = "WORKER_DONE"
+    ERROR = "WORKER_ERROR"
+
+    def __init__(self, kind, task_id, payload=None):
+        self.kind = kind
+        self.task_id = task_id
+        self.payload = payload
+
+
+def _worker_main(task_id, task, q):
+    q.put(WorkerEvent(WorkerEvent.STARTED, task_id))
+    try:
+        result = task.run()
+        q.put(WorkerEvent(WorkerEvent.DONE, task_id, result))
+    except BaseException as e:  # noqa: BLE001 — reported upstream
+        q.put(WorkerEvent(WorkerEvent.ERROR, task_id,
+                          f"{type(e).__name__}: {e}\n{traceback.format_exc()}"))
+
+
+class ProcessWorkerPool:
+    def __init__(self, n_workers: int):
+        self.n_workers = n_workers
+        self._q = mp.Queue()
+        self._procs: dict[int, mp.Process] = {}
+        self._started: dict[int, float] = {}
+
+    def idle(self) -> int:
+        return self.n_workers - len(self._procs)
+
+    def running(self) -> dict[int, float]:
+        return dict(self._started)
+
+    def start(self, task_id: int, task) -> None:
+        p = mp.Process(target=_worker_main, args=(task_id, task, self._q),
+                       daemon=True)
+        p.start()
+        self._procs[task_id] = p
+        self._started[task_id] = time.time()
+
+    def poll(self) -> list[WorkerEvent]:
+        events = []
+        while True:
+            try:
+                ev = self._q.get_nowait()
+            except _queue.Empty:
+                break
+            events.append(ev)
+            if ev.kind in (WorkerEvent.DONE, WorkerEvent.ERROR):
+                self._reap(ev.task_id)
+        # reap processes that died without reporting (hard crash)
+        for tid, p in list(self._procs.items()):
+            if not p.is_alive():
+                p.join(timeout=1)
+                self._reap(tid)
+                events.append(WorkerEvent(WorkerEvent.ERROR, tid,
+                                          "worker died (no report)"))
+        return events
+
+    def terminate(self, task_id: int) -> None:
+        p = self._procs.get(task_id)
+        if p is not None and p.is_alive():
+            p.terminate()
+            p.join(timeout=5)
+        self._reap(task_id)
+
+    def _reap(self, task_id):
+        self._procs.pop(task_id, None)
+        self._started.pop(task_id, None)
+
+    def shutdown(self):
+        for tid in list(self._procs):
+            self.terminate(tid)
+
+
+class SimWorkerPool:
+    """Virtual-clock pool: each task must carry ``sim_duration`` (seconds of
+    virtual time); completion fires when the clock passes start+duration."""
+
+    def __init__(self, n_workers: int, clock):
+        self.n_workers = n_workers
+        self._clock = clock
+        self._running: dict[int, tuple] = {}   # id -> (task, start, end)
+        self._pending_started: list[int] = []
+
+    def idle(self) -> int:
+        return self.n_workers - len(self._running)
+
+    def running(self) -> dict[int, float]:
+        return {tid: t0 for tid, (_, t0, _) in self._running.items()}
+
+    def start(self, task_id: int, task) -> None:
+        now = self._clock.now()
+        dur = getattr(task, "sim_duration", 1.0)
+        self._running[task_id] = (task, now, now + dur)
+        self._pending_started.append(task_id)
+
+    def poll(self) -> list[WorkerEvent]:
+        events = [WorkerEvent(WorkerEvent.STARTED, tid)
+                  for tid in self._pending_started]
+        self._pending_started.clear()
+        now = self._clock.now()
+        for tid, (task, t0, t_end) in list(self._running.items()):
+            if now >= t_end:
+                del self._running[tid]
+                try:
+                    result = task.run()
+                except BaseException as e:  # noqa: BLE001
+                    events.append(WorkerEvent(WorkerEvent.ERROR, tid, str(e)))
+                else:
+                    events.append(WorkerEvent(WorkerEvent.DONE, tid, result))
+        return events
+
+    def terminate(self, task_id: int) -> None:
+        self._running.pop(task_id, None)
+
+    def shutdown(self):
+        self._running.clear()

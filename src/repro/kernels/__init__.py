@@ -1,0 +1,12 @@
+# Pallas TPU kernels for the substrate's compute hot-spots (the ExpoCloud
+# paper itself is orchestration-level and has no kernel contribution — see
+# DESIGN.md):
+#   flash_attention.py — GQA flash attention (BlockSpec VMEM tiling, online
+#                        softmax in VMEM scratch across the KV grid axis)
+#   ssd_scan.py        — Mamba-2 SSD chunked scan (state carried in VMEM
+#                        scratch across the chunk grid axis)
+#   ops.py             — jit'd wrappers with backend dispatch
+#   ref.py             — pure-jnp oracles
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,69 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Dispatch policy (this container is CPU-only; TPU is the *target*):
+
+* backend == 'tpu'      -> compiled Pallas kernel (BlockSpec VMEM tiling)
+* REPRO_PALLAS=interpret -> Pallas kernel body interpreted on CPU (tests)
+* otherwise             -> pure-jnp reference (XLA), bit-for-bit the oracle
+
+so models always call ``ops.flash_attention`` / ``ops.ssd_scan`` and get the
+best available implementation.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _mode() -> str:
+    env = os.environ.get("REPRO_PALLAS", "auto")
+    if env in ("interpret", "ref", "naive", "kernel"):
+        return env
+    if jax.default_backend() == "tpu":
+        return "kernel"
+    return "ref"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+                    q_offset: int = 0, block_q: int = 128, block_k: int = 128):
+    """GQA flash attention. q: [B,Sq,H,D], k/v: [B,Sk,K,D] -> [B,Sq,H,D]."""
+    mode = _mode()
+    if mode == "naive":
+        return ref.attention_ref(q, k, v, causal=causal, scale=scale,
+                                 q_offset=q_offset)
+    if mode == "ref":
+        # blockwise (flash-style) XLA lowering — same algorithm as the
+        # Pallas kernel, honest HBM profile on non-TPU backends.
+        # (custom_vjp: positional args only)
+        from repro.kernels.xla_flash import blockwise_attention
+
+        return blockwise_attention(q, k, v, causal, scale, q_offset,
+                                   max(block_k, 512))
+    from repro.kernels import flash_attention as fk
+
+    return fk.flash_attention(
+        q, k, v, causal=causal, scale=scale, q_offset=q_offset,
+        block_q=block_q, block_k=block_k, interpret=(mode == "interpret"),
+    )
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 64, h0=None,
+             return_final_state: bool = False):
+    """Mamba-2 SSD chunked scan. See kernels.ref.ssd_chunked_ref."""
+    mode = _mode()
+    if mode == "ref":
+        return ref.ssd_chunked_ref(
+            x, dt, A, Bm, Cm, chunk=chunk, h0=h0,
+            return_final_state=return_final_state)
+    from repro.kernels import ssd_scan as sk
+
+    return sk.ssd_scan(
+        x, dt, A, Bm, Cm, chunk=chunk, h0=h0,
+        return_final_state=return_final_state,
+        interpret=(mode == "interpret"),
+    )

@@ -1,0 +1,133 @@
+"""Blockwise (flash-style) attention in pure JAX/XLA with a flash backward.
+
+This is the lowering path on non-TPU backends: algorithmically identical to
+the Pallas kernel — online softmax over KV blocks, O(S·block) live memory,
+bf16 matmul operands with fp32 accumulation (preferred_element_type), the
+softmax/log-sum-exp domain in fp32.  The backward is a custom_vjp
+implementing the FlashAttention backward (recompute p = exp(s - lse) per
+block from saved (q, k, v, out, lse)) so autodiff does NOT store per-block
+scan carries — matching the memory behaviour of the TPU kernel.
+Validated against kernels.ref.attention_ref for values and grads.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def blockwise_attention(q, k, v, causal=True, scale=None, q_offset=0,
+                        block_k=512):
+    out, _ = _fwd_impl(q, k, v, causal, scale, q_offset, block_k)
+    return out
+
+
+def _prep(q, k, v, scale, block_k):
+    B, Sq, H, D = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    scale = D ** -0.5 if scale is None else scale
+    block_k = int(os.environ.get("REPRO_FLASH_BLOCK", block_k))
+    block_k = min(block_k, Sk)
+    pad = (-Sk) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nk = k.shape[1] // block_k
+    qg = q.reshape(B, Sq, K, H // K, D)
+    kb = k.reshape(B, nk, block_k, K, D)
+    vb = v.reshape(B, nk, block_k, K, v.shape[-1])
+    return qg, kb, vb, nk, block_k, Sk, scale
+
+
+def _scores(qg, kk, kpos, qpos, Sk, causal, scale):
+    """fp32-accumulated scores with masking. qg [B,Sq,K,G,D], kk [B,bk,K,D]."""
+    s = jnp.einsum("bqkgd,bskd->bqkgs", qg, kk,
+                   preferred_element_type=jnp.float32) * scale
+    valid = kpos[None, :] < Sk
+    if causal:
+        valid = jnp.logical_and(valid, kpos[None, :] <= qpos[:, None])
+    return jnp.where(valid[None, :, None, None, :], s, NEG_INF)
+
+
+def _fwd_impl(q, k, v, causal, scale, q_offset, block_k):
+    B, Sq, H, D = q.shape
+    Dv = v.shape[-1]
+    qg, kb, vb, nk, bk, Sk, scale = _prep(q, k, v, scale, block_k)
+    K, G = kb.shape[3], H // kb.shape[3]
+    qpos = jnp.arange(Sq) + q_offset
+
+    def step(carry, ik):
+        m_prev, l_prev, acc = carry
+        kpos = ik * bk + jnp.arange(bk)
+        s = _scores(qg, kb[:, ik], kpos, qpos, Sk, causal, scale)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqkgs,bskd->bqkgd", p.astype(q.dtype), vb[:, ik],
+                        preferred_element_type=jnp.float32)
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Sq, K, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, K, G), jnp.float32)
+    acc0 = jnp.zeros((B, Sq, K, G, Dv), jnp.float32)
+    inner_unroll = nk if os.environ.get('REPRO_UNROLL_INNER') else 1
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0), jnp.arange(nk),
+                                  unroll=inner_unroll)
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l_safe[..., None]).reshape(B, Sq, H, Dv).astype(q.dtype)
+    lse = m + jnp.log(l_safe)
+    return out, lse
+
+
+def _vjp_fwd(q, k, v, causal, scale, q_offset, block_k):
+    out, lse = _fwd_impl(q, k, v, causal, scale, q_offset, block_k)
+    return out, (q, k, v, out, lse)
+
+
+def _vjp_bwd(causal, scale, q_offset, block_k, res, dout):
+    q, k, v, out, lse = res
+    B, Sq, H, D = q.shape
+    Dv = v.shape[-1]
+    qg, kb, vb, nk, bk, Sk, scale_v = _prep(q, k, v, scale, block_k)
+    K, G = kb.shape[3], H // kb.shape[3]
+    qpos = jnp.arange(Sq) + q_offset
+    do = dout.reshape(B, Sq, K, G, Dv)
+    of = out.reshape(B, Sq, K, G, Dv)
+    Dsum = jnp.sum(do.astype(jnp.float32) * of.astype(jnp.float32), axis=-1)
+
+    def step(dq, ik):
+        kpos = ik * bk + jnp.arange(bk)
+        s = _scores(qg, kb[:, ik], kpos, qpos, Sk, causal, scale_v)
+        p = jnp.exp(s - lse[..., None])                    # fp32 [B,Sq,K,G,bk]
+        dv_b = jnp.einsum("bqkgs,bqkgd->bskd", p.astype(q.dtype), do,
+                          preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bqkgd,bskd->bqkgs", do, vb[:, ik],
+                        preferred_element_type=jnp.float32)
+        ds = (p * (dp - Dsum[..., None])).astype(q.dtype)  # dL/d(s/scale-part)
+        dq = dq + jnp.einsum("bqkgs,bskd->bqkgd", ds, kb[:, ik],
+                             preferred_element_type=jnp.float32)
+        dk_b = jnp.einsum("bqkgs,bqkgd->bskd", ds, qg,
+                          preferred_element_type=jnp.float32)
+        return dq, (dk_b, dv_b)
+
+    dq0 = jnp.zeros((B, Sq, K, G, D), jnp.float32)
+    inner_unroll = nk if os.environ.get('REPRO_UNROLL_INNER') else 1
+    dq, (dk_blocks, dv_blocks) = jax.lax.scan(step, dq0, jnp.arange(nk),
+                                              unroll=inner_unroll)
+    dq = (dq * scale_v).reshape(B, Sq, H, D).astype(q.dtype)
+    dk = (jnp.moveaxis(dk_blocks, 0, 1).reshape(B, nk * bk, K, D)[:, :Sk]
+          * scale_v).astype(k.dtype)
+    dv = jnp.moveaxis(dv_blocks, 0, 1).reshape(B, nk * bk, K, Dv)[:, :Sk] \
+        .astype(v.dtype)
+    return dq, dk, dv
+
+
+blockwise_attention.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,88 @@
+"""``input_specs`` — ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no device allocation) for every model input of every
+(arch x shape) cell, plus the abstract param/optimizer/cache trees.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeConfig
+from repro.models import lm
+from repro.models.params import abstract_params
+from repro.sharding.rules import ShardingRules
+from repro.sharding.zero import opt_state_shardings
+
+
+def _sds(shape, dtype, rules: ShardingRules | None, logical):
+    sharding = rules.sharding(logical, shape) if rules is not None else None
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype), sharding=sharding)
+
+
+def batch_specs(cfg, shape: ShapeConfig, rules: ShardingRules | None = None):
+    """The data batch for a cell (train/prefill: full sequences;
+    decode: one new token per sequence + positions)."""
+    B, S = shape.global_batch, shape.seq_len
+    specs = {}
+    if shape.kind in ("train", "prefill"):
+        tok_shape = (B, S, cfg.num_codebooks) if cfg.num_codebooks else (B, S)
+        tok_logical = ("batch", "seq", None) if cfg.num_codebooks \
+            else ("batch", "seq")
+        specs["tokens"] = _sds(tok_shape, jnp.int32, rules, tok_logical)
+        if cfg.vision_stub:
+            N = cfg.num_image_tokens
+            specs["image_embeds"] = _sds((B, N, cfg.d_model), jnp.bfloat16,
+                                         rules, ("batch", None, "embed"))
+            specs["image_positions"] = _sds((B, N), jnp.int32, rules,
+                                            ("batch", None))
+    else:  # decode
+        tok_shape = (B, 1, cfg.num_codebooks) if cfg.num_codebooks else (B, 1)
+        tok_logical = ("batch", None, None) if cfg.num_codebooks \
+            else ("batch", None)
+        specs["tokens"] = _sds(tok_shape, jnp.int32, rules, tok_logical)
+        specs["pos"] = _sds((B,), jnp.int32, rules, ("batch",))
+    return specs
+
+
+def cache_specs(cfg, shape: ShapeConfig, rules: ShardingRules | None = None):
+    assert shape.kind == "decode"
+    descr = lm.make_cache(cfg, shape.global_batch, shape.seq_len)
+    return abstract_params(descr, rules)
+
+
+def param_specs_abstract(cfg, rules: ShardingRules | None = None):
+    return abstract_params(lm.make_lm(cfg), rules)
+
+
+def opt_specs_abstract(cfg, opt, opt_name: str,
+                       rules: ShardingRules | None = None, zero1: bool = True):
+    """Abstract optimizer state with ZeRO-1 shardings."""
+    params_abs = param_specs_abstract(cfg, rules)
+    state_abs = jax.eval_shape(opt.init, params_abs)
+    if rules is None:
+        return state_abs
+    shardings = opt_state_shardings(opt_name, lm.make_lm(cfg), rules,
+                                    zero1=zero1)
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        state_abs, shardings)
+
+
+def input_specs(cfg, shape: ShapeConfig, rules: ShardingRules | None = None,
+                opt=None, opt_name: str = "adamw", zero1: bool = True):
+    """Everything the jitted step needs, as ShapeDtypeStructs.
+
+    train  -> (params, opt_state, batch, step)
+    prefill-> (params, batch)
+    decode -> (params, batch, cache)
+    """
+    params = param_specs_abstract(cfg, rules)
+    batch = batch_specs(cfg, shape, rules)
+    if shape.kind == "train":
+        assert opt is not None
+        opt_state = opt_specs_abstract(cfg, opt, opt_name, rules, zero1)
+        step = jax.ShapeDtypeStruct((), jnp.int32)
+        return (params, opt_state, batch, step)
+    if shape.kind == "prefill":
+        return (params, batch)
+    return (params, batch, cache_specs(cfg, shape, rules))

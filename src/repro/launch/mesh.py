@@ -1,0 +1,26 @@
+"""Production meshes.
+
+Functions, not module-level constants — importing this module never touches
+jax device state (jax locks the device count on first backend init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model).
+    Multi-pod: 2 pods x 256 chips (pod, data, model); 'pod' is the
+    DCI-connected outer data axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple, axes: tuple):
+    """Arbitrary mesh for tests (e.g. (2, 4) on 8 host devices)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def device_count_required(multi_pod: bool) -> int:
+    return 512 if multi_pod else 256

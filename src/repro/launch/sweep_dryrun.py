@@ -1,0 +1,84 @@
+"""Drive the full (arch x shape x mesh) dry-run grid through ExpoCloud.
+
+    PYTHONPATH=src python -m repro.launch.sweep_dryrun \
+        --mesh single --mode probe --out dryrun_results [--archs a b ...]
+
+The grid is exactly the paper's use case: tasks ordered easiest->hardest by
+static hardness, a deadline per cell, timeouts domino-pruning dominating
+cells, results in a tabular report.  Cells run as subprocesses via the
+LocalEngine (one worker per client — compiles are single-core here).
+
+mode=full   full-config lower+compile per cell (the dry-run proof)
+mode=probe  unrolled small-layer-count probes (roofline extrapolation)
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.configs import cells, get_config
+from repro.core.engine import LocalEngine
+from repro.core.server import Server, ServerConfig
+from repro.core.sweep import DryRunCellTask, probe_plans
+
+
+def build_tasks(archs, shapes, meshes, modes, deadline, out_dir,
+                variant=None):
+    tasks = []
+    for arch, shape in cells():
+        if archs and arch not in archs:
+            continue
+        if shapes and shape not in shapes:
+            continue
+        for mesh in meshes:
+            if "full" in modes:
+                tasks.append(DryRunCellTask(
+                    arch, shape, mesh, None, variant, deadline, out_dir))
+            if "probe" in modes and mesh == "single":
+                for plan in probe_plans(arch):
+                    tasks.append(DryRunCellTask(
+                        arch, shape, mesh, plan,
+                        dict(variant or {}, unroll=1), deadline, out_dir))
+    return tasks
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--mode", choices=["full", "probe", "both"],
+                    default="both")
+    ap.add_argument("--archs", nargs="*", default=None)
+    ap.add_argument("--shapes", nargs="*", default=None)
+    ap.add_argument("--deadline", type=float, default=1800.0)
+    ap.add_argument("--out", default="dryrun_results")
+    ap.add_argument("--variant", nargs="*", default=[])
+    ap.add_argument("--max-clients", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    modes = ["full", "probe"] if args.mode == "both" else [args.mode]
+    variant = dict(kv.split("=", 1) for kv in args.variant) \
+        if args.variant else None
+
+    tasks = build_tasks(args.archs, args.shapes, meshes, modes,
+                        args.deadline, args.out, variant)
+    print(f"[sweep] {len(tasks)} cells queued")
+    engine = LocalEngine(n_workers_per_client=1)
+    config = ServerConfig(
+        max_clients=args.max_clients,
+        use_backup=False,                  # paper: no backup locally
+        health_update_limit=60.0,
+        instance_max_non_active_time=120.0,
+        out_dir=args.out + "/expocloud",
+    )
+    server = Server(tasks, engine, config)
+    t0 = time.time()
+    table = server.run(poll_sleep=0.2)
+    print(f"[sweep] done in {time.time()-t0:.0f}s")
+    print(table.to_csv())
+    engine.shutdown()
+
+
+if __name__ == "__main__":
+    main()

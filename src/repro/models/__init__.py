@@ -1,0 +1,6 @@
+from repro.models import lm
+from repro.models.params import (Param, abstract_params, init_params,
+                                 param_count, param_shardings, param_specs)
+
+__all__ = ["lm", "Param", "abstract_params", "init_params", "param_count",
+           "param_shardings", "param_specs"]

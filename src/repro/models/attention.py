@@ -1,0 +1,95 @@
+"""GQA/MQA attention with qk-norm, partial/interleaved RoPE, and a decode
+path against a pre-allocated KV cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.layers import rmsnorm
+from repro.models.params import Param
+from repro.models.rope import apply_rope
+from repro.sharding.rules import shard
+
+
+def make_attention(cfg):
+    d = cfg.d_model
+    p = {
+        "wq": Param((d, cfg.q_dim), ("embed", "heads"), init="scaled"),
+        "wk": Param((d, cfg.kv_dim), ("embed", "kv_heads"), init="scaled"),
+        "wv": Param((d, cfg.kv_dim), ("embed", "kv_heads"), init="scaled"),
+        "wo": Param((cfg.q_dim, d), ("heads", "embed"), init="scaled"),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = Param((cfg.head_dim,), (None,), init="ones")
+        p["k_norm"] = Param((cfg.head_dim,), (None,), init="ones")
+    return p
+
+
+def _qkv(cfg, p, x, positions):
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = (x @ p["wk"]).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = (x @ p["wv"]).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    rd = cfg.rotary_dim
+    if rd:
+        q = apply_rope(q, positions, theta=cfg.rope_theta, rotary_dim=rd,
+                       interleaved=cfg.rope_interleaved)
+        k = apply_rope(k, positions, theta=cfg.rope_theta, rotary_dim=rd,
+                       interleaved=cfg.rope_interleaved)
+    return q, k, v
+
+
+def apply_attention(cfg, p, x, positions):
+    """Full-sequence causal attention (train / prefill).
+
+    x: [B, S, d]; positions: [S] or [B, S]. Returns ([B, S, d], (k, v))."""
+    q, k, v = _qkv(cfg, p, x, positions)
+    q = shard(q, "batch", "seq", None, None)
+    k = shard(k, "batch", "seq_kv", None, None)
+    out = ops.flash_attention(q, k, v, causal=True)
+    out = out.reshape(*x.shape[:2], cfg.q_dim)
+    out = shard(out, "batch", "seq", "heads")
+    return out @ p["wo"], (k, v)
+
+
+def make_kv_cache(cfg, batch: int, max_seq: int, stack: tuple = ()):
+    """Descriptor tree for the KV cache (materialise with init_params or
+    abstract_params)."""
+    lead = tuple(stack)
+    lead_logical = (None,) * len(lead)
+    shape = (*lead, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+    logical = (*lead_logical, "batch", "seq_kv", "kv_heads", None)
+    return {
+        "k": Param(shape, logical, init="zeros", dtype=cfg.dtype),
+        "v": Param(shape, logical, init="zeros", dtype=cfg.dtype),
+    }
+
+
+def apply_attention_decode(cfg, p, x, cache, pos, active=None):
+    """One-token decode. x: [B, 1, d]; cache: {k,v: [B, Smax, K, hd]};
+    pos: [B] int32 (index of the new token); active: optional [B] bool —
+    inactive slots leave the cache untouched (continuous batching).
+    Returns (out, new_cache)."""
+    B = x.shape[0]
+    q, k_new, v_new = _qkv(cfg, p, x, pos[:, None])
+    b_idx = jnp.arange(B)
+    smax = cache["k"].shape[1]
+    wpos = pos if active is None else jnp.where(active, pos, smax)
+    k = cache["k"].at[b_idx, wpos, ...].set(k_new[:, 0], mode="drop")
+    v = cache["v"].at[b_idx, wpos, ...].set(v_new[:, 0], mode="drop")
+    Smax, K = k.shape[1], k.shape[2]
+    G = cfg.num_heads // K
+    qg = q.reshape(B, 1, K, G, cfg.head_dim).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg[:, 0], k.astype(jnp.float32))
+    scores = scores * (cfg.head_dim ** -0.5)
+    mask = jnp.arange(Smax)[None, :] <= pos[:, None]  # [B, Smax]
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(jnp.float32))
+    out = out.reshape(B, 1, cfg.q_dim).astype(x.dtype)
+    return out @ p["wo"], {"k": k, "v": v}

@@ -1,0 +1,230 @@
+"""Residual blocks: (mixer ∈ {attn, mla, mamba}) + (ffn ∈ {dense, moe, none}),
+plus the Jamba super-block (hybrid interleave) and stacking helpers for
+jax.lax.scan over layer stacks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import mla as mla_mod
+from repro.models.layers import (apply_dense_ffn, make_dense_ffn, make_norm,
+                                 rmsnorm)
+from repro.models.moe import apply_moe, make_moe
+from repro.models.params import Param, tree_map
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+def make_block(cfg, mixer: str, ffn: str):
+    p = {"ln1": make_norm(cfg.d_model)}
+    if mixer == "attn":
+        p["mixer"] = attn_mod.make_attention(cfg)
+    elif mixer == "mla":
+        p["mixer"] = mla_mod.make_mla(cfg)
+    elif mixer == "mamba":
+        p["mixer"] = mamba_mod.make_mamba(cfg)
+    else:
+        raise ValueError(mixer)
+    if ffn == "dense":
+        p["ln2"] = make_norm(cfg.d_model)
+        p["ffn"] = make_dense_ffn(cfg, cfg.d_ff_dense or cfg.d_ff)
+    elif ffn == "moe":
+        p["ln2"] = make_norm(cfg.d_model)
+        p["ffn"] = make_moe(cfg)
+    elif ffn != "none":
+        raise ValueError(ffn)
+    return p
+
+
+def apply_block(cfg, p, h, positions, mixer: str, ffn: str):
+    """Full-sequence residual block. Returns (h, aux_loss)."""
+    x = rmsnorm(h, p["ln1"], cfg.norm_eps)
+    if mixer == "attn":
+        r, _ = attn_mod.apply_attention(cfg, p["mixer"], x, positions)
+    elif mixer == "mla":
+        r, _ = mla_mod.apply_mla(cfg, p["mixer"], x, positions)
+    else:
+        r, _ = mamba_mod.apply_mamba(cfg, p["mixer"], x, positions)
+    h = h + r
+    aux = jnp.zeros((), jnp.float32)
+    if ffn != "none":
+        x = rmsnorm(h, p["ln2"], cfg.norm_eps)
+        if ffn == "moe":
+            B, S, d = x.shape
+            y, aux = apply_moe(cfg, p["ffn"], x.reshape(B * S, d))
+            y = y.reshape(B, S, d)
+        else:
+            y = apply_dense_ffn(cfg, p["ffn"], x)
+        h = h + y
+    return h, aux
+
+
+def apply_block_collect(cfg, p, h, positions, mixer: str, ffn: str):
+    """Like apply_block but also returns the prefill cache
+    (attn: {k,v}, mla: {ckv,kpe}, mamba: {conv,ssm})."""
+    x = rmsnorm(h, p["ln1"], cfg.norm_eps)
+    if mixer == "attn":
+        r, (k, v) = attn_mod.apply_attention(cfg, p["mixer"], x, positions)
+        cache = {"k": k, "v": v}
+    elif mixer == "mla":
+        r, (ckv, kpe) = mla_mod.apply_mla(cfg, p["mixer"], x, positions)
+        cache = {"ckv": ckv, "kpe": kpe}
+    else:
+        r, (conv, ssm) = mamba_mod.apply_mamba(cfg, p["mixer"], x, positions)
+        cache = {"conv": conv, "ssm": ssm}
+    h = h + r
+    aux = jnp.zeros((), jnp.float32)
+    if ffn != "none":
+        x = rmsnorm(h, p["ln2"], cfg.norm_eps)
+        if ffn == "moe":
+            Bs, S, d = x.shape
+            y, aux = apply_moe(cfg, p["ffn"], x.reshape(Bs * S, d))
+            y = y.reshape(Bs, S, d)
+        else:
+            y = apply_dense_ffn(cfg, p["ffn"], x)
+        h = h + y
+    return h, aux, cache
+
+
+def make_block_cache(cfg, mixer: str, batch: int, max_seq: int,
+                     stack: tuple = ()):
+    if mixer == "attn":
+        return attn_mod.make_kv_cache(cfg, batch, max_seq, stack)
+    if mixer == "mla":
+        return mla_mod.make_mla_cache(cfg, batch, max_seq, stack)
+    return mamba_mod.make_mamba_cache(cfg, batch, stack)
+
+
+def apply_block_decode(cfg, p, h, cache, pos, mixer: str, ffn: str,
+                       active=None):
+    """One-token decode. Returns (h, new_cache)."""
+    x = rmsnorm(h, p["ln1"], cfg.norm_eps)
+    if mixer == "attn":
+        r, new_cache = attn_mod.apply_attention_decode(cfg, p["mixer"], x,
+                                                       cache, pos, active)
+    elif mixer == "mla":
+        r, new_cache = mla_mod.apply_mla_decode(cfg, p["mixer"], x, cache,
+                                                pos, active)
+    else:
+        r, new_cache = mamba_mod.apply_mamba_decode(cfg, p["mixer"], x, cache,
+                                                    pos, active)
+    h = h + r
+    if ffn != "none":
+        x = rmsnorm(h, p["ln2"], cfg.norm_eps)
+        if ffn == "moe":
+            B, S, d = x.shape
+            y, _ = apply_moe(cfg, p["ffn"], x.reshape(B * S, d))
+            y = y.reshape(B, S, d)
+        else:
+            y = apply_dense_ffn(cfg, p["ffn"], x)
+        h = h + y
+    return h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# stacking (scan over homogeneous layers)
+# ---------------------------------------------------------------------------
+def stack_descr(tree, n: int):
+    """Prepend a stacked 'layers' dim of size n to every Param descriptor."""
+    return tree_map(
+        lambda p: Param((n, *p.shape), ("layers", *p.logical), p.init,
+                        p.dtype, p.scale),
+        tree,
+    )
+
+
+def take_layer(tree, i: int):
+    return jax.tree_util.tree_map(lambda x: x[i], tree)
+
+
+# ---------------------------------------------------------------------------
+# Jamba super-block
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class HybridPlan:
+    """Layer plan within one super-block: (group, index_within_group,
+    mixer, ffn) per in-block position."""
+    entries: tuple  # of (group, idx, mixer, ffn)
+    group_sizes: dict
+
+    @staticmethod
+    def build(cfg) -> "HybridPlan":
+        hb = cfg.hybrid_block
+        assert hb and cfg.num_layers % hb == 0
+        m = cfg.moe
+        if m is not None:
+            assert hb % m.every == 0, "MoE period must divide the super-block"
+        entries, sizes = [], {}
+        for i in range(hb):
+            mixer = "attn" if i == cfg.hybrid_attn_index else "mamba"
+            ffn = "moe" if (cfg.moe is not None and cfg.is_moe_layer(i)) \
+                else "dense"
+            group = f"{mixer}_{ffn}"
+            idx = sizes.get(group, 0)
+            sizes[group] = idx + 1
+            entries.append((group, idx, mixer, ffn))
+        return HybridPlan(tuple(entries), sizes)
+
+
+def make_super_block(cfg, plan: HybridPlan):
+    p = {}
+    for group, n in plan.group_sizes.items():
+        mixer, ffn = group.split("_")
+        p[group] = stack_descr(make_block(cfg, mixer, ffn), n)
+    return p
+
+
+def apply_super_block(cfg, p, h, positions, plan: HybridPlan):
+    aux = jnp.zeros((), jnp.float32)
+    for group, idx, mixer, ffn in plan.entries:
+        h, a = apply_block(cfg, take_layer(p[group], idx), h, positions,
+                           mixer, ffn)
+        aux = aux + a
+    return h, aux
+
+
+def apply_super_block_collect(cfg, p, h, positions, plan: HybridPlan):
+    aux = jnp.zeros((), jnp.float32)
+    per_group = {g: [None] * n for g, n in plan.group_sizes.items()}
+    for group, idx, mixer, ffn in plan.entries:
+        h, a, cache = apply_block_collect(
+            cfg, take_layer(p[group], idx), h, positions, mixer, ffn)
+        aux = aux + a
+        per_group[group][idx] = cache
+    stacked = {
+        g: jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *lst)
+        for g, lst in per_group.items()
+    }
+    return h, aux, stacked
+
+
+def make_super_block_cache(cfg, plan: HybridPlan, batch: int, max_seq: int,
+                           stack: tuple = ()):
+    c = {}
+    for group, n in plan.group_sizes.items():
+        mixer, _ = group.split("_")
+        c[group] = make_block_cache(cfg, mixer, batch, max_seq,
+                                    stack=(*stack, n))
+    return c
+
+
+def apply_super_block_decode(cfg, p, h, cache, pos, plan: HybridPlan,
+                             active=None):
+    new_cache = {g: [None] * n for g, n in plan.group_sizes.items()}
+    for group, idx, mixer, ffn in plan.entries:
+        h, nc = apply_block_decode(
+            cfg, take_layer(p[group], idx), h, take_layer(cache[group], idx),
+            pos, mixer, ffn, active)
+        new_cache[group][idx] = nc
+    # restack each group's caches along the leading dim
+    stacked = {}
+    for g, lst in new_cache.items():
+        stacked[g] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs, axis=0), *lst)
+    return h, stacked

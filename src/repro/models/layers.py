@@ -1,0 +1,50 @@
+"""Shared layers: RMSNorm, dense FFN (SwiGLU / GELU-MLP), embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import Param
+from repro.sharding.rules import shard
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def make_norm(d: int) -> Param:
+    return Param((d,), (None,), init="ones")
+
+
+def make_dense_ffn(cfg, width: int):
+    d = cfg.d_model
+    if cfg.act == "silu":  # gated SwiGLU
+        return {
+            "wi": Param((d, width), ("embed", "ffn"), init="scaled"),
+            "wg": Param((d, width), ("embed", "ffn"), init="scaled"),
+            "wo": Param((width, d), ("ffn", "embed"), init="scaled"),
+        }
+    return {  # classic 2-matrix GELU MLP (granite / musicgen)
+        "wi": Param((d, width), ("embed", "ffn"), init="scaled"),
+        "wo": Param((width, d), ("ffn", "embed"), init="scaled"),
+    }
+
+
+def apply_dense_ffn(cfg, p, x):
+    h = x @ p["wi"]
+    if "wg" in p:
+        h = jax.nn.silu(x @ p["wg"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = shard(h, "batch", None, "ffn")
+    return h @ p["wo"]
+
+
+def make_embedding(vocab: int, d: int) -> Param:
+    return Param((vocab, d), ("vocab", "embed"), init="normal", scale=0.02)
+
+
+def embed_lookup(table, ids):
+    return jnp.take(table, ids, axis=0)

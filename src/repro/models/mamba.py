@@ -1,0 +1,136 @@
+"""Mamba-2 block (SSD formulation) with chunked-scan train/prefill and
+O(1)-state decode.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.layers import rmsnorm
+from repro.models.params import Param
+from repro.sharding.rules import shard
+
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    nheads = s.n_heads(cfg.d_model)
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, nheads, conv_ch
+
+
+def make_mamba(cfg):
+    s, d_in, nheads, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    proj_out = 2 * d_in + 2 * s.n_groups * s.d_state + nheads
+    return {
+        "in_proj": Param((d, proj_out), ("embed", "ffn"), init="scaled"),
+        "conv_w": Param((s.d_conv, conv_ch), (None, "ffn"), init="scaled"),
+        "conv_b": Param((conv_ch,), ("ffn",), init="zeros"),
+        "A_log": Param((nheads,), (None,), init="const", scale=0.5,
+                       dtype="float32"),
+        "D": Param((nheads,), (None,), init="ones", dtype="float32"),
+        "dt_bias": Param((nheads,), (None,), init="zeros", dtype="float32"),
+        "norm": Param((d_in,), (None,), init="ones"),
+        "out_proj": Param((d_in, d), ("ffn", "embed"), init="scaled"),
+    }
+
+
+def _split_proj(cfg, proj):
+    s, d_in, nheads, _ = _dims(cfg)
+    gs = s.n_groups * s.d_state
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in: 2 * d_in + 2 * gs]
+    dt = proj[..., 2 * d_in + 2 * gs:]
+    return z, xbc, dt
+
+
+def _causal_conv(p, xbc):
+    """Depthwise causal conv via K shifted adds (K=d_conv is tiny)."""
+    K = p["conv_w"].shape[0]
+    out = xbc * p["conv_w"][K - 1]
+    for i in range(1, K):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, : xbc.shape[1]]
+        out = out + shifted * p["conv_w"][K - 1 - i]
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def apply_mamba(cfg, p, x, positions=None):
+    """Full-sequence Mamba-2 (train/prefill).
+
+    x: [B, S, d] -> (y [B, S, d], (conv_state, ssm_state)) where
+    conv_state: [B, d_conv-1, conv_ch], ssm_state: [B, H, P, N] fp32."""
+    s, d_in, nheads, conv_ch = _dims(cfg)
+    B, S, _ = x.shape
+    proj = x @ p["in_proj"]
+    proj = shard(proj, "batch", "seq", "ffn")
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    conv_state = xbc[:, S - (s.d_conv - 1):, :]  # final (d_conv-1) inputs
+    xbc = _causal_conv(p, xbc)
+    xs = xbc[..., :d_in].reshape(B, S, nheads, s.head_dim)
+    Bm = xbc[..., d_in: d_in + s.n_groups * s.d_state].reshape(
+        B, S, s.n_groups, s.d_state)
+    Cm = xbc[..., d_in + s.n_groups * s.d_state:].reshape(
+        B, S, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    chunk = int(os.environ.get("REPRO_SSD_CHUNK", s.chunk))
+    y, h_final = ops.ssd_scan(xs, dt, A, Bm, Cm, chunk=chunk,
+                              return_final_state=True)
+    y = y + xs * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, S, d_in)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    y = shard(y, "batch", "seq", "ffn")
+    return y @ p["out_proj"], (conv_state, h_final)
+
+
+def make_mamba_cache(cfg, batch: int, stack: tuple = ()):
+    s, d_in, nheads, conv_ch = _dims(cfg)
+    lead = tuple(stack)
+    ll = (None,) * len(lead)
+    return {
+        "conv": Param((*lead, batch, s.d_conv - 1, conv_ch),
+                      (*ll, "batch", None, "ffn"), init="zeros",
+                      dtype=cfg.dtype),
+        "ssm": Param((*lead, batch, nheads, s.head_dim, s.d_state),
+                     (*ll, "batch", None, None, None), init="zeros",
+                     dtype="float32"),
+    }
+
+
+def apply_mamba_decode(cfg, p, x, cache, pos=None, active=None):
+    """One-token decode. x: [B, 1, d]; cache {conv, ssm}; active: optional
+    [B] bool — inactive slots keep their conv/SSM state unchanged."""
+    s, d_in, nheads, conv_ch = _dims(cfg)
+    B = x.shape[0]
+    proj = x[:, 0] @ p["in_proj"]  # [B, proj_out]
+    z, xbc_new, dt_raw = _split_proj(cfg, proj)
+    conv = cache["conv"]  # [B, K-1, conv_ch]
+    K = s.d_conv
+    window = jnp.concatenate([conv, xbc_new[:, None, :]], axis=1)  # [B,K,ch]
+    xbc = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"])
+    new_conv = window[:, 1:]
+    xs = xbc[..., :d_in].reshape(B, nheads, s.head_dim)
+    Bm = xbc[..., d_in: d_in + s.n_groups * s.d_state].reshape(
+        B, s.n_groups, s.d_state)
+    Cm = xbc[..., d_in + s.n_groups * s.d_state:].reshape(
+        B, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    from repro.kernels.ref import ssd_decode_step_ref
+
+    y, h_new = ssd_decode_step_ref(xs, dt, A, Bm, Cm, cache["ssm"])
+    if active is not None:
+        gate = active.reshape(B, 1, 1, 1)
+        h_new = jnp.where(gate, h_new, cache["ssm"])
+        new_conv = jnp.where(active.reshape(B, 1, 1), new_conv, cache["conv"])
+    y = y + xs * p["D"][None, :, None].astype(y.dtype)
+    y = y.reshape(B, 1, d_in)
+    y = rmsnorm(y * jax.nn.silu(z[:, None, :]), p["norm"], cfg.norm_eps)
+    # keep the residual-stream dtype even when the conv cache is fp32
+    out = (y @ p["out_proj"]).astype(x.dtype)
+    return out, {"conv": new_conv, "ssm": h_new}

@@ -1,0 +1,124 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Prefill/train: materialise per-head K/V from the compressed latent.
+Decode: *weight-absorbed* path — queries are projected into the latent space
+so attention runs directly against the cached (c_kv, k_pe); the cache is
+(kv_lora_rank + qk_rope_head_dim) per token instead of 2·H·head_dim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.layers import rmsnorm
+from repro.models.params import Param
+from repro.models.rope import apply_rope
+from repro.sharding.rules import shard
+
+
+def make_mla(cfg):
+    d, m, H = cfg.d_model, cfg.mla, cfg.num_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wdq": Param((d, m.q_lora_rank), ("embed", "q_lora"), init="scaled"),
+        "q_norm": Param((m.q_lora_rank,), (None,), init="ones"),
+        "wuq": Param((m.q_lora_rank, H * qk_head), ("q_lora", "heads"),
+                     init="scaled"),
+        "wdkv": Param((d, m.kv_lora_rank), ("embed", "kv_lora"), init="scaled"),
+        "wkr": Param((d, m.qk_rope_head_dim), ("embed", None), init="scaled"),
+        "kv_norm": Param((m.kv_lora_rank,), (None,), init="ones"),
+        "wuk": Param((m.kv_lora_rank, H * m.qk_nope_head_dim),
+                     ("kv_lora", "heads"), init="scaled"),
+        "wuv": Param((m.kv_lora_rank, H * m.v_head_dim),
+                     ("kv_lora", "heads"), init="scaled"),
+        "wo": Param((H * m.v_head_dim, d), ("heads", "embed"), init="scaled"),
+    }
+
+
+def _queries(cfg, p, x, positions):
+    B, S, _ = x.shape
+    m, H = cfg.mla, cfg.num_heads
+    cq = rmsnorm(x @ p["wdq"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["wuq"]).reshape(B, S, H, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_pe = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_pe = apply_rope(q_pe, positions, theta=cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def _latent_kv(cfg, p, x, positions):
+    m = cfg.mla
+    ckv = rmsnorm(x @ p["wdkv"], p["kv_norm"], cfg.norm_eps)  # [B,S,r]
+    k_pe = apply_rope((x @ p["wkr"])[:, :, None, :], positions,
+                      theta=cfg.rope_theta)[:, :, 0]  # [B,S,rope]
+    return ckv, k_pe
+
+
+def apply_mla(cfg, p, x, positions):
+    """Full-sequence MLA (train/prefill). Returns (out, (ckv, k_pe))."""
+    B, S, _ = x.shape
+    m, H = cfg.mla, cfg.num_heads
+    q_nope, q_pe = _queries(cfg, p, x, positions)
+    ckv, k_pe = _latent_kv(cfg, p, x, positions)
+    k_nope = (ckv @ p["wuk"]).reshape(B, S, H, m.qk_nope_head_dim)
+    v = (ckv @ p["wuv"]).reshape(B, S, H, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[:, :, None], (*k_pe.shape[:2], H, m.qk_rope_head_dim))],
+        axis=-1,
+    )
+    q = shard(q, "batch", "seq", None, None)
+    k = shard(k, "batch", "seq_kv", None, None)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    out = ops.flash_attention(q, k, v, causal=True, scale=scale)
+    out = out.reshape(B, S, H * m.v_head_dim)
+    out = shard(out, "batch", "seq", "heads")
+    return out @ p["wo"], (ckv, k_pe)
+
+
+def make_mla_cache(cfg, batch: int, max_seq: int, stack: tuple = ()):
+    m = cfg.mla
+    lead = tuple(stack)
+    ll = (None,) * len(lead)
+    return {
+        "ckv": Param((*lead, batch, max_seq, m.kv_lora_rank),
+                     (*ll, "batch", "seq_kv", None), init="zeros",
+                     dtype=cfg.dtype),
+        "kpe": Param((*lead, batch, max_seq, m.qk_rope_head_dim),
+                     (*ll, "batch", "seq_kv", None), init="zeros",
+                     dtype=cfg.dtype),
+    }
+
+
+def apply_mla_decode(cfg, p, x, cache, pos, active=None):
+    """Weight-absorbed one-token decode.
+
+    x: [B,1,d]; cache {ckv: [B,S,r], kpe: [B,S,rope]}; pos: [B];
+    active: optional [B] bool (inactive slots leave the cache untouched)."""
+    B = x.shape[0]
+    m, H = cfg.mla, cfg.num_heads
+    q_nope, q_pe = _queries(cfg, p, x, pos[:, None])  # [B,1,H,*]
+    ckv_new, kpe_new = _latent_kv(cfg, p, x, pos[:, None])
+    b_idx = jnp.arange(B)
+    smax = cache["ckv"].shape[1]
+    wpos = pos if active is None else jnp.where(active, pos, smax)
+    ckv = cache["ckv"].at[b_idx, wpos, ...].set(ckv_new[:, 0], mode="drop")
+    kpe = cache["kpe"].at[b_idx, wpos, ...].set(kpe_new[:, 0], mode="drop")
+    Smax = ckv.shape[1]
+    # absorb W_UK into q: q_lat[b,h,r] = sum_d q_nope[b,h,d] W_UK[r, h*d]
+    wuk = p["wuk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       wuk.astype(jnp.float32))
+    scores = jnp.einsum("bhr,bsr->bhs", q_lat, ckv.astype(jnp.float32))
+    scores += jnp.einsum("bhd,bsd->bhs", q_pe[:, 0].astype(jnp.float32),
+                         kpe.astype(jnp.float32))
+    scores *= (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    mask = jnp.arange(Smax)[None, :] <= pos[:, None]
+    scores = jnp.where(mask[:, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", probs, ckv.astype(jnp.float32))
+    # absorb W_UV on the way out
+    wuv = p["wuv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bhr,rhd->bhd", o_lat, wuv.astype(jnp.float32))
+    out = out.reshape(B, 1, H * m.v_head_dim).astype(x.dtype)
+    return out @ p["wo"], {"ckv": ckv, "kpe": kpe}

@@ -1,0 +1,105 @@
+"""Parameter descriptors: single source of truth for shape, init and
+sharding of every model parameter.
+
+Model definitions build a nested-dict tree of ``Param`` leaves; the tree is
+then materialised three ways:
+
+* ``init_params(tree, rng)``        -> tree of arrays (real init)
+* ``abstract_params(tree)``         -> tree of ShapeDtypeStruct (dry-run)
+* ``param_specs(tree, rules)``      -> tree of PartitionSpec
+* ``param_shardings(tree, rules)``  -> tree of NamedSharding
+
+so the dry-run never allocates and the real path shares the same metadata.
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Param:
+    shape: tuple
+    logical: tuple          # logical axis name (or None) per dim
+    init: str = "normal"    # normal | zeros | ones | scaled | const
+    dtype: str = "bfloat16"
+    scale: float | None = None  # for 'normal': std; for 'const': the value
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def tree_map(fn, tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_param)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _init_one(p: Param, key) -> jax.Array:
+    dtype = jnp.dtype(p.dtype)
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init == "const":
+        return jnp.full(p.shape, p.scale, dtype)
+    if p.init == "scaled":  # 1/sqrt(fan_in) for matmul weights
+        fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+        std = 1.0 / np.sqrt(fan_in)
+        return (jax.random.normal(key, p.shape, jnp.float32) * std).astype(dtype)
+    std = 0.02 if p.scale is None else p.scale
+    return (jax.random.normal(key, p.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_params(tree, rng):
+    """Deterministic init: each leaf's key is rng folded with its path hash."""
+
+    def go(path, p: Param):
+        # zlib.crc32 is stable across processes (hash() is salted)
+        h = np.uint32(zlib.crc32(_path_str(path).encode()))
+        return _init_one(p, jax.random.fold_in(rng, h))
+
+    return jax.tree_util.tree_map_with_path(go, tree, is_leaf=is_param)
+
+
+def abstract_params(tree, rules=None):
+    def go(p: Param):
+        sharding = rules.sharding(p.logical, p.shape) if rules is not None else None
+        return jax.ShapeDtypeStruct(p.shape, jnp.dtype(p.dtype), sharding=sharding)
+
+    return tree_map(go, tree)
+
+
+def param_specs(tree, rules):
+    return tree_map(lambda p: rules.spec(p.logical, p.shape), tree)
+
+
+def param_shardings(tree, rules):
+    return tree_map(lambda p: rules.sharding(p.logical, p.shape), tree)
+
+
+def param_count(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_param)
+    return sum(int(np.prod(p.shape)) for p in leaves)
+
+
+def cast_tree(tree, dtype):
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), tree)

@@ -1,0 +1,118 @@
+"""Batched decode engine with slot-based continuous batching.
+
+Requests are admitted into fixed batch slots between decode steps.  Each
+slot carries its own position counter (positions are a [B] vector through
+the model) and an ``active`` mask: inactive slots write nothing to the KV
+cache and keep their SSM/conv state frozen, so admission/retirement of one
+request never perturbs the others — this is what makes continuous batching
+correct for hybrid/SSM architectures, not just KV-cache transformers.
+
+Prompt consumption here is sequential forced decode (one token per step,
+per slot admission); the launcher's ``prefill`` path is the batched
+alternative for long prompts.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.params import init_params
+from repro.serve.sampler import sample
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray          # [S] (or [S, cb]) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    output: list = field(default_factory=list)
+    done: bool = False
+
+
+class DecodeEngine:
+    def __init__(self, cfg, params, *, batch_slots: int = 4,
+                 max_seq: int = 512, rng_seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.B = batch_slots
+        self.max_seq = max_seq
+        self.cache = init_params(lm.make_cache(cfg, batch_slots, max_seq),
+                                 jax.random.PRNGKey(0))
+        self.pos = np.zeros((batch_slots,), np.int32)
+        self.active: list[Request | None] = [None] * batch_slots
+        self.remaining = np.zeros((batch_slots,), np.int32)
+        # remaining prompt tokens to force-feed, per slot
+        self.pending_prompt: list[list] = [[] for _ in range(batch_slots)]
+        self.rng = jax.random.PRNGKey(rng_seed)
+        self.queue: list[Request] = []
+        self.steps = 0
+
+        def _step(params, cache, tokens, pos, active):
+            batch = {"tokens": tokens, "pos": pos, "active": active}
+            logits, new_cache = lm.decode_step(cfg, params, batch, cache)
+            return logits, new_cache
+
+        self._decode = jax.jit(_step, donate_argnums=(1,))
+        self._next_tokens = np.zeros(self._tok_shape(), np.int32)
+
+    def _tok_shape(self):
+        if self.cfg.num_codebooks:
+            return (self.B, 1, self.cfg.num_codebooks)
+        return (self.B, 1)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.B):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self.active[slot] = req
+                self.pos[slot] = 0
+                self.remaining[slot] = req.max_new_tokens
+                self.pending_prompt[slot] = list(req.prompt)
+                first = self.pending_prompt[slot].pop(0)
+                self._next_tokens[slot, 0] = first
+
+    def step(self) -> int:
+        """One decode step across all slots; returns #requests finished."""
+        self._admit()
+        live = np.array([r is not None for r in self.active])
+        if not live.any():
+            return 0
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self._next_tokens),
+            jnp.asarray(self.pos), jnp.asarray(live))
+        self.steps += 1
+        self.rng, sub = jax.random.split(self.rng)
+        logits_np = np.asarray(logits.astype(jnp.float32))
+        finished = 0
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.pos[slot] += 1
+            if self.pending_prompt[slot]:
+                # still forcing the prompt; next input is the next prompt tok
+                self._next_tokens[slot, 0] = self.pending_prompt[slot].pop(0)
+                continue
+            tok = np.asarray(sample(jnp.asarray(logits_np[slot]), sub,
+                                    temperature=req.temperature))
+            req.output.append(tok.copy())
+            self.remaining[slot] -= 1
+            self._next_tokens[slot, 0] = tok
+            if self.remaining[slot] <= 0 or self.pos[slot] >= self.max_seq - 1:
+                req.done = True
+                self.active[slot] = None
+                finished += 1
+        return finished
+
+    def run_until_drained(self, max_steps: int = 100_000) -> int:
+        while (self.queue or any(r is not None for r in self.active)) \
+                and self.steps < max_steps:
+            self.step()
+        return self.steps

@@ -1,0 +1,5 @@
+from repro.sharding.rules import (ShardingRules, current_rules, make_rules,
+                                  shard, use_rules)
+
+__all__ = ["ShardingRules", "current_rules", "make_rules", "shard",
+           "use_rules"]

@@ -1,0 +1,77 @@
+"""Beyond-paper distributed-optimization trick: int8 error-feedback
+gradient all-reduce.
+
+On the production mesh, gradients are all-reduced over ('pod', 'data') by
+XLA as a byproduct of SPMD autodiff.  For DCI-limited multi-pod training the
+cross-pod reduction can be compressed: quantise grads to int8 with a
+per-tensor scale, all-reduce the int8 payload (4x fewer bytes over the
+slow links), dequantise, and keep the quantisation residual locally
+(error feedback, Karimireddy et al. 2019) so compression noise becomes a
+*delayed* rather than *lost* signal.
+
+Implemented as a grad-transform usable in two modes:
+  * `simulate_quantize` — pure per-tensor fake-quant + error feedback
+    (works under pjit; the all-reduce stays XLA's, bytes savings are
+    modelled in the roofline, not realised on CPU).
+  * `shard_map_allreduce_int8` — explicit shard_map psum over a named axis
+    of the int8 payload (the real collective layout; exercised in tests on
+    a host-device mesh).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _quant(x, bits: int = 8):
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    qmax = 2.0 ** (bits - 1) - 1
+    scale = amax / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def make_error_feedback_compress(descr_like):
+    """Returns (init_fn, transform) where transform(grads, residuals) ->
+    (compressed_grads, new_residuals)."""
+
+    def init(params):
+        return jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def transform(grads, residuals):
+        def per(g, r):
+            gf = g.astype(jnp.float32) + r
+            q, scale = _quant(gf)
+            deq = _dequant(q, scale)
+            return deq.astype(g.dtype), gf - deq
+
+        out = jax.tree_util.tree_map(per, grads, residuals)
+        is_pair = lambda t: isinstance(t, tuple)
+        new_g = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=is_pair)
+        new_r = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=is_pair)
+        return new_g, new_r
+
+    return init, transform
+
+
+def allreduce_int8(x, axis_name: str):
+    """Explicit compressed all-reduce of one tensor over a mesh axis.
+
+    Quantises locally, psums the int8 payload as int32 (saturation-safe for
+    <= 2^23 participants), rescales by the max scale.  Call inside
+    shard_map with the DP axes named.
+    """
+    q, scale = _quant(x)
+    scale = jax.lax.pmax(scale, axis_name)  # common scale: max over ranks
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.int32), axis_name)
+    return (total.astype(jnp.float32) * scale / n.astype(jnp.float32)).astype(x.dtype)

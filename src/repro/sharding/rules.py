@@ -1,0 +1,136 @@
+"""Logical-axis sharding rules.
+
+Model code annotates parameters and activations with *logical* axis names
+('batch', 'heads', 'ffn', 'experts', 'vocab', ...).  A ``ShardingRules``
+object (built from a concrete mesh) resolves logical names to physical mesh
+axes, dropping any axis whose dimension is not divisible by the mesh axes it
+maps to (e.g. granite-20b's single KV head cannot be sharded over model=16
+and silently falls back to replication — the Megatron/MaxText convention).
+
+Rules are installed with ``use_rules(rules)``; model code calls
+``shard(x, *logical)`` which is a no-op when no rules are installed
+(single-device smoke tests).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+# Default logical->physical tables.  'pod' participates in the batch axes on
+# the multi-pod mesh (outer data parallelism across pods).
+def default_table(mesh: Mesh, seq_shard: bool = False) -> dict:
+    axes = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in axes)
+    tp = ("model",) if "model" in axes else ()
+    table = {
+        "batch": dp,
+        "seq": (),          # sequence usually replicated ...
+        "seq_kv": (),       # ... unless sequence sharding is on
+        "vocab": tp,
+        "heads": tp,
+        "kv_heads": tp,
+        "ffn": tp,
+        "experts": tp,
+        "embed": (),
+        "model_dim": (),    # alias of embed for activations
+        "state": (),
+        "layers": (),
+        "q_lora": (),
+        "kv_lora": (),
+        "codebooks": (),
+    }
+    if seq_shard:
+        # long-context cells: batch < data-axis size -> shard sequence on data
+        table["seq"] = ("data",)
+        table["seq_kv"] = ("data",)
+        table["batch"] = tuple(a for a in dp if a != "data")
+    return table
+
+
+@dataclass
+class ShardingRules:
+    mesh: Mesh
+    table: dict = field(default_factory=dict)
+
+    def axis_size(self, phys: tuple[str, ...]) -> int:
+        return math.prod(self.mesh.shape[a] for a in phys)
+
+    def spec(self, logical, shape=None) -> PartitionSpec:
+        """Resolve a logical spec (tuple of names/None) to a PartitionSpec.
+
+        If ``shape`` is given, drop mesh axes that don't divide the dim.
+        """
+        out = []
+        for i, name in enumerate(logical):
+            if shape is not None and i >= len(shape):
+                break  # caller passed more names than dims (e.g. 2-D path
+                       # through a 3-D helper); extra names are moot
+            if name is None:
+                out.append(None)
+                continue
+            phys = self.table.get(name, ())
+            if not phys:
+                out.append(None)
+                continue
+            if shape is not None:
+                if shape[i] % self.axis_size(phys) != 0:
+                    out.append(None)
+                    continue
+            out.append(phys[0] if len(phys) == 1 else phys)
+        # PartitionSpec forbids repeating a mesh axis; guard against tables
+        # that would double-use one (can happen with custom tables).
+        seen: set[str] = set()
+        clean = []
+        for entry in out:
+            names = (entry,) if isinstance(entry, str) else (entry or ())
+            if any(n in seen for n in names):
+                clean.append(None)
+            else:
+                seen.update(names)
+                clean.append(entry)
+        return PartitionSpec(*clean)
+
+    def sharding(self, logical, shape=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical, shape))
+
+
+_current: contextvars.ContextVar[ShardingRules | None] = contextvars.ContextVar(
+    "sharding_rules", default=None
+)
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules | None):
+    tok = _current.set(rules)
+    try:
+        yield rules
+    finally:
+        _current.reset(tok)
+
+
+def current_rules() -> ShardingRules | None:
+    return _current.get()
+
+
+def make_rules(mesh: Mesh, seq_shard: bool = False, **overrides) -> ShardingRules:
+    table = default_table(mesh, seq_shard=seq_shard)
+    table.update(overrides)
+    return ShardingRules(mesh=mesh, table=table)
+
+
+def shard(x, *logical):
+    """Constrain an activation's sharding by logical axis names.
+
+    No-op when no rules are installed or the name resolves to nothing.
+    """
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.spec(logical, shape=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))

@@ -1,0 +1,125 @@
+"""Training loop with checkpoint/restart fault tolerance.
+
+Designed so the *ExpoCloud worker* can run it as a task: if the process (or
+the node) dies, re-invoking ``run_training`` with the same arguments resumes
+from the latest checkpoint — the paper's `tasks_from_failed` reassignment
+plus this loop's restore gives end-to-end at-least-once training progress.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.data.synthetic import DataConfig, SyntheticIterator, batch_at
+from repro.models import lm
+from repro.models.params import abstract_params, init_params, param_shardings
+from repro.checkpoint import checkpointer as ckpt
+from repro.sharding.rules import use_rules
+from repro.sharding.zero import opt_state_shardings
+from repro.train.optimizer import get_optimizer
+from repro.train.schedule import warmup_cosine
+from repro.train.train_step import make_train_step
+
+
+@dataclass
+class TrainJob:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str | None = None
+    log_every: int = 10
+    keep: int = 3
+    base_lr: float = 3e-4
+    warmup: int = 20
+    clip_norm: float = 1.0
+    optimizer: str = "adamw"
+    remat: bool = True
+    seed: int = 0
+    async_ckpt: bool = True
+    zero1: bool = True
+    # injected fault for tests: raise after N steps (simulates preemption)
+    fail_after_step: int | None = None
+
+
+def run_training(cfg, data_cfg: DataConfig, job: TrainJob, *, rules=None,
+                 log=print):
+    """Returns (history, final_step). Restores from job.ckpt_dir if present."""
+    descr = lm.make_lm(cfg)
+    opt = get_optimizer(job.optimizer)
+    lr_fn = warmup_cosine(job.base_lr, job.warmup, job.total_steps)
+    step_fn = make_train_step(cfg, opt, lr_fn, clip_norm=job.clip_norm,
+                              remat=job.remat)
+
+    param_sh = opt_sh = None
+    if rules is not None:
+        param_sh = param_shardings(descr, rules)
+        opt_sh = opt_state_shardings(job.optimizer, descr, rules,
+                                     zero1=job.zero1)
+
+    start_step = 0
+    params = opt_state = None
+    if job.ckpt_dir and ckpt.available_steps(job.ckpt_dir):
+        like_p = jax.eval_shape(lambda: init_params(descr, jax.random.PRNGKey(0)))
+        like_o = jax.eval_shape(opt.init, like_p)
+        state, start_step, meta = ckpt.restore(
+            job.ckpt_dir, {"params": like_p, "opt": like_o},
+            shardings=({"params": param_sh, "opt": opt_sh}
+                       if param_sh is not None else None))
+        params, opt_state = state["params"], state["opt"]
+        log(f"[train] restored checkpoint at step {start_step}")
+    else:
+        with use_rules(rules):
+            params = init_params(descr, jax.random.PRNGKey(job.seed))
+            opt_state = opt.init(params)
+        if param_sh is not None:
+            params = jax.tree_util.tree_map(jax.device_put, params, param_sh)
+            opt_state = jax.tree_util.tree_map(jax.device_put, opt_state,
+                                               opt_sh)
+
+    def wrapped(params, opt_state, batch, step):
+        with use_rules(rules):
+            return step_fn(params, opt_state, batch, step)
+
+    jit_kwargs = {}
+    if param_sh is not None:
+        jit_kwargs = dict(
+            in_shardings=(param_sh, opt_sh, None, None),
+            out_shardings=(param_sh, opt_sh, None),
+        )
+    jstep = jax.jit(wrapped, donate_argnums=(0, 1), **jit_kwargs)
+
+    it = SyntheticIterator(data_cfg, start_step)
+    history = []
+    pending_writer = None
+    t0 = time.time()
+    for step in range(start_step, job.total_steps):
+        batch = {k: jax.numpy.asarray(v) for k, v in next(it).items()}
+        params, opt_state, metrics = jstep(params, opt_state, batch,
+                                           jax.numpy.asarray(step))
+        if job.fail_after_step is not None and step >= job.fail_after_step:
+            raise RuntimeError(f"injected failure at step {step}")
+        if (step + 1) % job.log_every == 0 or step == start_step:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append(dict(m, step=step))
+            log(f"[train] step {step} loss={m['loss']:.4f} "
+                f"lr={m['lr']:.2e} ({time.time()-t0:.1f}s)")
+        if job.ckpt_dir and (step + 1) % job.ckpt_every == 0:
+            if pending_writer is not None:
+                pending_writer.join()
+            pending_writer = ckpt.save(
+                job.ckpt_dir, step + 1,
+                {"params": params, "opt": opt_state},
+                metadata={"arch": cfg.name, "data_state": it.state()},
+                async_write=job.async_ckpt)
+            ckpt.prune(job.ckpt_dir, job.keep)
+    if pending_writer is not None:
+        pending_writer.join()
+    if job.ckpt_dir:
+        w = ckpt.save(job.ckpt_dir, job.total_steps,
+                      {"params": params, "opt": opt_state},
+                      metadata={"arch": cfg.name, "data_state": it.state()},
+                      async_write=False)
+    return history, job.total_steps, params

@@ -1,0 +1,43 @@
+"""The jitted training step: value_and_grad -> clip -> optimizer update.
+
+``make_train_step`` returns a pure function suitable for jax.jit with
+donated (params, opt_state); the launcher decides shardings.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.train.optimizer import clip_by_global_norm
+
+
+def make_train_step(cfg, opt, lr_fn, *, clip_norm: float = 1.0,
+                    remat: bool = True, compress=None, unroll: bool = False):
+    """compress: optional gradient-compression transform
+    (see sharding/compression.py) applied to grads before the update."""
+
+    def train_step(params, opt_state, batch, step):
+        def loss_fn(p):
+            loss, metrics = lm.train_loss(cfg, p, batch, remat=remat,
+                                          unroll=unroll)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        if compress is not None:
+            grads, opt_state = compress(grads, opt_state)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = lr_fn(step)
+        params, opt_state = opt.update(grads, opt_state, params, lr)
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def eval_step(cfg, params, batch):
+    loss, metrics = lm.train_loss(cfg, params, batch, remat=False)
+    return metrics

@@ -1,0 +1,60 @@
+"""Dry-run pipeline on a small host-device mesh (subprocess keeps this
+process at 1 device): lower+compile succeeds, roofline record is coherent,
+inapplicable cells are reported as such."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_dryrun(args, devices="8", timeout=520):
+    env = dict(os.environ, PYTHONPATH="src", REPRO_DRYRUN_DEVICES=devices)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun"] + args,
+        capture_output=True, text=True, env=env, timeout=timeout, cwd=ROOT)
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("smollm-360m", "train_4k"),
+    ("mamba2-130m", "long_500k"),
+    ("musicgen-medium", "decode_32k"),
+])
+def test_dryrun_cell_small_mesh(arch, shape, tmp_path):
+    out = str(tmp_path / "cell.json")
+    r = run_dryrun(["--arch", arch, "--shape", shape,
+                    "--mesh-shape", "2", "4",
+                    "--mesh-axes", "data", "model", "--json", out])
+    assert r.returncode == 0, r.stdout[-2500:] + r.stderr[-2500:]
+    rec = json.load(open(out))
+    assert rec["status"] == "ok"
+    roof = rec["roofline"]
+    assert roof["hlo_flops"] > 0
+    assert roof["dominant"] in ("compute", "memory", "collective")
+    assert rec["chips"] == 8
+    assert "CompiledMemoryStats" in rec["memory_analysis"]
+
+
+def test_dryrun_inapplicable_cell(tmp_path):
+    out = str(tmp_path / "cell.json")
+    r = run_dryrun(["--arch", "qwen3-4b", "--shape", "long_500k",
+                    "--mesh-shape", "2", "4",
+                    "--mesh-axes", "data", "model", "--json", out])
+    assert r.returncode == 0
+    rec = json.load(open(out))
+    assert rec["status"] == "inapplicable"
+
+
+def test_dryrun_multipod_axes_small(tmp_path):
+    """3-axis (pod, data, model) mesh shards on a small host config."""
+    out = str(tmp_path / "cell.json")
+    r = run_dryrun(["--arch", "smollm-360m", "--shape", "decode_32k",
+                    "--mesh-shape", "2", "2", "2",
+                    "--mesh-axes", "pod", "data", "model", "--json", out])
+    assert r.returncode == 0, r.stdout[-2500:] + r.stderr[-2500:]
+    rec = json.load(open(out))
+    assert rec["status"] == "ok"
+    assert rec["mesh"] == "pod2xdata2xmodel2"

@@ -1,0 +1,101 @@
+"""End-to-end scheduler behaviour on the deterministic simulator."""
+import pytest
+
+from repro.core.server import ServerConfig
+from repro.core.sim import SimCluster, SimParams, SimTask
+
+
+def mk_tasks(n, dur=1.0, deadline=None, hardness=None):
+    return [SimTask((i, 0), ("n", "id"),
+                    hardness(i) if hardness else (i,),
+                    dur if isinstance(dur, float) else dur(i),
+                    deadline, (i,))
+            for i in range(1, n + 1)]
+
+
+def test_all_tasks_solved_and_order_restored():
+    tasks = mk_tasks(15)
+    # shuffle: server must sort by hardness and restore original order
+    tasks = tasks[::-1]
+    cl = SimCluster(tasks, ServerConfig(max_clients=3, use_backup=False))
+    srv = cl.run(until=600)
+    rows = srv.final_results.rows
+    assert [p[0] for p, r, s in rows] == [t.parameters()[0] for t in tasks]
+    assert all(r is not None for _, r, _ in rows)
+
+
+def test_timeout_triggers_domino_pruning():
+    # duration grows with i; deadline cuts at i == 7
+    tasks = mk_tasks(12, dur=lambda i: 0.6 * i, deadline=4.0)
+    cl = SimCluster(tasks, ServerConfig(max_clients=2, use_backup=False))
+    srv = cl.run(until=600)
+    status = {p[0]: s for p, r, s in srv.final_results.rows}
+    solved = [i for i, s in status.items() if s == "done"]
+    assert max(solved) <= 7
+    assert "timed_out" in status.values()
+    assert "pruned" in status.values()
+    # min_hard retained the minimal timed-out hardness only
+    assert len(srv.min_hard) == 1
+
+
+def test_domino_prunes_only_dominating_tasks():
+    """2-d hardness: timeout on (3, 0) must not prune (0, k) tasks."""
+    tasks = []
+    for a in range(5):
+        for b in range(5):
+            dur = 10.0 if (a >= 3 and b >= 3) else 0.2
+            tasks.append(SimTask((a, b, 0), ("a", "b", "id"), (a, b),
+                                 dur, 2.0, (a * b,)))
+    cl = SimCluster(tasks, ServerConfig(max_clients=2, use_backup=False))
+    srv = cl.run(until=600)
+    for p, r, s in srv.final_results.rows:
+        a, b, _ = p
+        if a < 3 or b < 3:
+            assert s == "done", (p, s)
+        else:
+            assert s in ("timed_out", "pruned"), (p, s)
+
+
+def test_min_group_size_retention():
+    # group (n,) of 4 instances each; make instance-id 3 of group 2 time out
+    tasks = []
+    for n in (1, 2):
+        for i in range(4):
+            slow = (n == 2 and i == 3)
+            tasks.append(SimTask(
+                (n, i), ("n", "id"), (n, i), 5.0 if slow else 0.3,
+                2.0 if slow else None, (n * 10 + i,)))
+    cfg = ServerConfig(max_clients=1, use_backup=False, min_group_size=4)
+    cl = SimCluster(tasks, cfg, SimParams(client_workers=1))
+    srv = cl.run(until=600)
+    rows = srv.final_results.rows
+    kept_groups = {p[0] for p, r, s in rows}
+    assert kept_groups == {1}, "group 2 has only 3 solved -> dropped"
+    assert srv.final_results.dropped_groups == [(2,)]
+
+
+def test_instances_deleted_when_done_saves_money():
+    """BYE -> terminate: cost must be far below keeping clients to the end."""
+    tasks = mk_tasks(8, dur=0.5)
+    cl = SimCluster(tasks, ServerConfig(max_clients=4, use_backup=False))
+    srv = cl.run(until=600)
+    # let the BYE round-trips drain (the server keeps running after done)
+    for _ in range(300):
+        cl.step()
+    # after completion no client instances remain (only the primary)
+    assert cl.engine.list_instances() == ["primary"]
+
+
+def test_easiest_first_assignment():
+    """With one worker, tasks must complete in hardness order."""
+    tasks = mk_tasks(6)[::-1]
+    cl = SimCluster(tasks, ServerConfig(max_clients=1, use_backup=False),
+                    SimParams(client_workers=1))
+    srv = cl.run(until=600)
+    events = srv.events
+    done_order = []
+    for client in ("client-0",):
+        for e in events.for_client(client):
+            if e["kind"] == "LOG" and e["body"].get("event") == "done":
+                done_order.append(e["body"]["tid"])
+    assert done_order == sorted(done_order)

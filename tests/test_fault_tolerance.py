@@ -1,0 +1,106 @@
+"""Fault-tolerance protocol tests (paper §Fault tolerance): client failure,
+backup-server failure, primary failure with takeover, dangling cleanup,
+exactly-once results under the two-copy delivery protocol."""
+import pytest
+
+from repro.core.server import ServerConfig
+from repro.core.sim import SimCluster, SimParams, SimTask
+
+
+def mk_tasks(n, dur=1.0):
+    return [SimTask((i, 0), ("n", "id"), (i,), dur, None, (i,))
+            for i in range(1, n + 1)]
+
+
+def kill_first(prefix):
+    def fn(c):
+        for name in c.engine.nodes:
+            if name.startswith(prefix) and c.engine.alive.get(name):
+                c.engine.kill(name)
+                return
+    return fn
+
+
+def solved_set(srv):
+    return sorted(p[0] for p, r, s in srv.final_results.rows
+                  if r is not None)
+
+
+def test_client_failure_reassigns_tasks():
+    cl = SimCluster(mk_tasks(20),
+                    ServerConfig(max_clients=2, use_backup=False,
+                                 health_update_limit=3.0))
+    cl.at(6.0, kill_first("client"))
+    srv = cl.run(until=900)
+    assert solved_set(srv) == list(range(1, 21))
+
+
+def test_primary_failure_backup_takes_over():
+    # workload long enough (~20s) that the kill at t=8 lands mid-run
+    cl = SimCluster(mk_tasks(40, dur=2.0),
+                    ServerConfig(max_clients=2, use_backup=True,
+                                 health_update_limit=3.0))
+    cl.at(8.0, lambda c: c.kill_primary())
+    srv = cl.run(until=900)
+    assert srv.role == "primary" and srv.name == "primary*"
+    assert solved_set(srv) == list(range(1, 41))
+    # exactly-once: every result appears exactly once
+    assert len(srv.results) == 40
+
+
+def test_backup_failure_is_replaced():
+    cl = SimCluster(mk_tasks(60, dur=2.0),
+                    ServerConfig(max_clients=2, use_backup=True,
+                                 health_update_limit=3.0))
+    cl.at(4.0, kill_first("backup"))
+    srv = cl.run(until=900)
+    assert solved_set(srv) == list(range(1, 61))
+    # a replacement backup was handshaken at some point
+    assert srv.backup_name is not None and srv.backup_name != "backup-0"
+
+
+def test_double_failure_client_then_primary():
+    cl = SimCluster(mk_tasks(30, dur=1.2),
+                    ServerConfig(max_clients=2, use_backup=True,
+                                 health_update_limit=3.0))
+    cl.at(6.0, kill_first("client"))
+    cl.at(14.0, lambda c: c.kill_primary())
+    srv = cl.run(until=1200)
+    assert solved_set(srv) == list(range(1, 31))
+
+
+def test_takeover_cleans_dangling_instances():
+    """Primary dies right after creating a client that never handshook;
+    the new primary must delete the unknown instance (paper §c end)."""
+    cl = SimCluster(mk_tasks(12, dur=1.0),
+                    ServerConfig(max_clients=3, use_backup=True,
+                                 health_update_limit=3.0))
+
+    def ghost_then_kill(c):
+        # instance exists on the engine but has no client object anywhere
+        c.engine._instances["client-ghost"] = c.clock.now()
+        c.kill_primary()
+
+    cl.at(8.0, ghost_then_kill)
+    srv = cl.run(until=900)
+    assert "client-ghost" not in cl.engine.list_instances()
+    assert solved_set(srv) == list(range(1, 13))
+
+
+def test_worker_crash_requeues_task():
+    class CrashOnce(SimTask):
+        crashed = {}
+
+        def run(self):
+            key = self.parameters()
+            if not CrashOnce.crashed.get(key):
+                CrashOnce.crashed[key] = True
+                raise RuntimeError("boom")
+            return self._result
+
+    CrashOnce.crashed = {}
+    tasks = [CrashOnce((i, 0), ("n", "id"), (i,), 0.5, None, (i,))
+             for i in range(1, 6)]
+    cl = SimCluster(tasks, ServerConfig(max_clients=2, use_backup=False))
+    srv = cl.run(until=900)
+    assert solved_set(srv) == list(range(1, 6))

@@ -1,0 +1,65 @@
+"""Hardness lattice + min_hard antichain: unit + hypothesis property tests."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hardness import Hardness, MinHardSet
+
+tuples = st.tuples(st.integers(0, 6), st.integers(0, 6), st.integers(0, 6))
+
+
+def test_geq_basic():
+    assert Hardness((2, 3)).geq(Hardness((1, 3)))
+    assert not Hardness((2, 3)).geq(Hardness((3, 1)))
+    assert Hardness((2, 3)).geq(Hardness((2, 3)))  # reflexive ("as hard")
+
+
+def test_minhard_keeps_minimal_elements():
+    m = MinHardSet()
+    assert m.add(Hardness((5, 5)))
+    assert m.add(Hardness((1, 9)))      # incomparable: retained
+    assert not m.add(Hardness((6, 6)))  # dominates (5,5): rejected
+    assert m.add(Hardness((4, 4)))      # dominates nothing; evicts (5,5)
+    vals = set(m.snapshot())
+    assert (5, 5) not in vals and (4, 4) in vals and (1, 9) in vals
+
+
+@given(st.lists(tuples, min_size=1, max_size=30))
+@settings(max_examples=200, deadline=None)
+def test_minhard_antichain_invariant(hs):
+    m = MinHardSet()
+    for h in hs:
+        m.add(Hardness(h))
+    items = list(m)
+    # (1) pairwise incomparable (antichain)
+    for i, a in enumerate(items):
+        for b in items[i + 1:]:
+            assert not (a.geq(b) or b.geq(a)), (a, b)
+    # (2) every inserted hardness is disqualified afterwards
+    for h in hs:
+        assert m.disqualifies(Hardness(h))
+
+
+@given(st.lists(tuples, min_size=1, max_size=20), tuples)
+@settings(max_examples=200, deadline=None)
+def test_disqualifies_is_upward_closed(hs, probe):
+    """If h is disqualified, anything dominating h is too (monotonicity)."""
+    m = MinHardSet()
+    for h in hs:
+        m.add(Hardness(h))
+    h = Hardness(probe)
+    if m.disqualifies(h):
+        bigger = Hardness(tuple(x + 1 for x in probe))
+        assert m.disqualifies(bigger)
+
+
+@given(st.lists(tuples, min_size=1, max_size=20))
+@settings(max_examples=100, deadline=None)
+def test_snapshot_restore_roundtrip(hs):
+    m = MinHardSet()
+    for h in hs:
+        m.add(Hardness(h))
+    m2 = MinHardSet()
+    m2.restore(m.snapshot())
+    assert set(m.snapshot()) == set(m2.snapshot())
+    for h in hs:
+        assert m2.disqualifies(Hardness(h))

@@ -1,0 +1,150 @@
+"""Pallas kernel validation: sweep shapes/dtypes, assert_allclose vs the
+pure-jnp oracles in repro.kernels.ref (kernels run in interpret=True on CPU).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import (attention_ref, ssd_chunked_ref,
+                               ssd_decode_step_ref, ssd_sequential_ref)
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("S,H,K,D", [
+    (128, 4, 4, 64),    # MHA
+    (256, 4, 2, 64),    # GQA
+    (256, 8, 1, 128),   # MQA
+    (128, 4, 2, 96),    # phi-3 head dim
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(S, H, K, D, causal, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(42), 3)
+    B = 2
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, K, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, K, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        out.astype(jnp.float32), ref.astype(jnp.float32), **_tol(dtype))
+
+
+def test_flash_attention_blocks_and_mla_dims():
+    """Uneven Dk != Dv (MLA prefill) + asymmetric blocks."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    B, S, H = 1, 256, 4
+    q = jax.random.normal(ks[0], (B, S, H, 192))
+    k = jax.random.normal(ks[1], (B, S, H, 192))
+    v = jax.random.normal(ks[2], (B, S, H, 128))
+    out = flash_attention(q, k, v, causal=True, scale=192 ** -0.5,
+                          block_q=128, block_k=64, interpret=True)
+    ref = attention_ref(q, k, v, causal=True, scale=192 ** -0.5)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_q_offset():
+    """Chunked-prefill style: queries start at a KV offset."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    B, Sq, Sk, H, D = 1, 64, 192, 2, 64
+    q = jax.random.normal(ks[0], (B, Sq, H, D))
+    k = jax.random.normal(ks[1], (B, Sk, H, D))
+    v = jax.random.normal(ks[2], (B, Sk, H, D))
+    out = flash_attention(q, k, v, causal=True, q_offset=128,
+                          block_q=64, block_k=64, interpret=True)
+    ref = attention_ref(q, k, v, causal=True, q_offset=128)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("S,H,P,G,N,chunk", [
+    (128, 4, 32, 2, 16, 32),
+    (128, 2, 64, 1, 64, 64),
+    (64, 6, 32, 1, 128, 16),   # mamba2-130m-like group/state
+    (96, 4, 32, 2, 16, 32),    # chunk does not divide -> clamps to min
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_sweep(S, H, P, G, N, chunk, dtype):
+    if S % chunk != 0:
+        pytest.skip("S must be divisible by chunk")
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    B = 2
+    x = jax.random.normal(ks[0], (B, S, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H))).astype(jnp.float32)
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, G, N), dtype)
+    Cm = jax.random.normal(ks[4], (B, S, G, N), dtype)
+    y_seq, hT = ssd_sequential_ref(x, dt, A, Bm, Cm)
+    y_k, hT_k = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk,
+                         return_final_state=True, interpret=True)
+    tol = dict(atol=1e-1, rtol=1e-1) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(
+        y_k.astype(jnp.float32), y_seq.astype(jnp.float32), **tol)
+    np.testing.assert_allclose(hT_k, hT, **tol)
+
+
+def test_ssd_chunked_ref_matches_sequential():
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    B, S, H, P, G, N = 2, 256, 4, 32, 2, 32
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+    for chunk in (32, 64, 128):
+        y = ssd_chunked_ref(x, dt, A, Bm, Cm, chunk=chunk)
+        y_seq, _ = ssd_sequential_ref(x, dt, A, Bm, Cm)
+        np.testing.assert_allclose(y, y_seq, atol=2e-3, rtol=2e-3)
+
+
+def test_ssd_state_carry_equals_one_shot():
+    """Splitting a sequence into two kernel calls with h0 carry == one shot."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    B, S, H, P, G, N = 1, 128, 2, 32, 1, 16
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+    y_full, h_full = ssd_scan(x, dt, A, Bm, Cm, chunk=32,
+                              return_final_state=True, interpret=True)
+    half = S // 2
+    y1, h1 = ssd_scan(x[:, :half], dt[:, :half], A, Bm[:, :half],
+                      Cm[:, :half], chunk=32, return_final_state=True,
+                      interpret=True)
+    y2, h2 = ssd_scan(x[:, half:], dt[:, half:], A, Bm[:, half:],
+                      Cm[:, half:], chunk=32, h0=h1,
+                      return_final_state=True, interpret=True)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full,
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(h2, h_full, atol=2e-4, rtol=2e-4)
+
+
+def test_ssd_decode_step_matches_sequential_tail():
+    """Prefill state + N decode steps == full sequential scan."""
+    ks = jax.random.split(jax.random.PRNGKey(11), 5)
+    B, S, H, P, G, N = 1, 64, 2, 16, 1, 16
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+    y_full, h_full = ssd_sequential_ref(x, dt, A, Bm, Cm)
+    cut = S - 4
+    _, h = ssd_sequential_ref(x[:, :cut], dt[:, :cut], A, Bm[:, :cut],
+                              Cm[:, :cut])
+    ys = []
+    for t in range(cut, S):
+        y, h = ssd_decode_step_ref(x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], h)
+        ys.append(y)
+    np.testing.assert_allclose(jnp.stack(ys, 1), y_full[:, cut:],
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(h, h_full, atol=2e-4, rtol=2e-4)

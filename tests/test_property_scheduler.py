@@ -1,0 +1,71 @@
+"""Hypothesis property tests over random workloads: scheduler invariants
+hold for arbitrary hardness lattices / durations / deadlines / failures."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hardness import Hardness
+from repro.core.server import ServerConfig
+from repro.core.sim import SimCluster, SimParams, SimTask
+
+task_strategy = st.tuples(
+    st.integers(0, 4),                    # hardness a
+    st.integers(0, 4),                    # hardness b
+    st.floats(0.1, 3.0),                  # duration
+)
+
+
+@given(st.lists(task_strategy, min_size=1, max_size=25),
+       st.floats(0.5, 2.5),               # deadline
+       st.integers(1, 3))                 # clients
+@settings(max_examples=25, deadline=None)
+def test_scheduler_invariants(specs, deadline, max_clients):
+    tasks = [SimTask((a, b, i), ("a", "b", "id"), (a, b), dur, deadline,
+                     (i,))
+             for i, (a, b, dur) in enumerate(specs)]
+    cl = SimCluster(tasks, ServerConfig(max_clients=max_clients,
+                                        use_backup=False),
+                    SimParams(client_workers=2))
+    srv = cl.run(until=5000)
+    table = srv.final_results
+
+    # 1. every task reaches a terminal state
+    assert all(s in ("done", "timed_out", "pruned") for _, _, s in table.rows)
+    # 2. no solved task is disqualified by min_hard
+    for p, r, s in table.rows:
+        h = Hardness((p[0], p[1]))
+        if s == "done":
+            assert r is not None
+    # 3. every pruned task dominates some timed-out hardness
+    timed_out = [Hardness((p[0], p[1])) for p, r, s in table.rows
+                 if s == "timed_out"]
+    for p, r, s in table.rows:
+        if s == "pruned":
+            h = Hardness((p[0], p[1]))
+            assert any(h.geq(t) for t in timed_out), (p, s)
+    # 4. results preserved 1:1 (no duplicates, no losses)
+    done_ids = [p[2] for p, r, s in table.rows if s == "done"]
+    assert len(done_ids) == len(set(done_ids)) == len(srv.results)
+
+
+@given(st.lists(task_strategy, min_size=4, max_size=20),
+       st.floats(3.0, 10.0),              # when to kill a client
+       st.integers(2, 3))
+@settings(max_examples=15, deadline=None)
+def test_invariants_hold_under_client_failure(specs, kill_at, max_clients):
+    tasks = [SimTask((a, b, i), ("a", "b", "id"), (a, b), dur, None, (i,))
+             for i, (a, b, dur) in enumerate(specs)]
+    cl = SimCluster(tasks, ServerConfig(max_clients=max_clients,
+                                        use_backup=False,
+                                        health_update_limit=3.0),
+                    SimParams(client_workers=2))
+
+    def kill(c):
+        for name in c.engine.nodes:
+            if name.startswith("client") and c.engine.alive.get(name):
+                c.engine.kill(name)
+                return
+
+    cl.at(kill_at, kill)
+    srv = cl.run(until=5000)
+    # no deadline -> every task must eventually be solved despite the crash
+    assert all(s == "done" for _, _, s in srv.final_results.rows)
+    assert len(srv.results) == len(tasks)

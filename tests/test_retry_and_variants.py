@@ -1,0 +1,59 @@
+"""Late-added behaviours: poison-task retry cap (beyond-paper) and the
+kv_shard_model decode variant."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.server import ServerConfig
+from repro.core.sim import SimCluster, SimParams, SimTask
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+class AlwaysCrash(SimTask):
+    def run(self):
+        raise RuntimeError("poison")
+
+
+def test_poison_task_is_capped_not_retried_forever():
+    tasks = [SimTask((1, 0), ("n", "id"), (1,), 0.3, None, (1,)),
+             AlwaysCrash((2, 0), ("n", "id"), (2,), 0.3, None, (2,)),
+             SimTask((3, 0), ("n", "id"), (3,), 0.3, None, (3,))]
+    cl = SimCluster(tasks, ServerConfig(max_clients=1, use_backup=False,
+                                        max_task_attempts=3),
+                    SimParams(client_workers=1))
+    srv = cl.run(until=600)   # finishes => no livelock
+    status = {p[0]: s for p, r, s in srv.final_results.rows}
+    assert status[1] == "done" and status[3] == "done"
+    assert status[2] == "pruned"          # capped after 3 attempts
+    assert srv.attempts.get(
+        [i for i, t in enumerate(srv.tasks)
+         if t.parameters()[0] == 2][0]) == 4
+
+
+def test_kv_shard_model_reduces_decode_bytes():
+    """Sharding the cache sequence over the TP axis must shrink the
+    decode-cell bytes/device (8 host devices, 2x4 mesh)."""
+    env = dict(os.environ, PYTHONPATH="src", REPRO_DRYRUN_DEVICES="8")
+
+    def run(variant, out):
+        # granite: MQA (kv=1) -> the cache can never shard over kv_heads,
+        # so seq-over-model is the only lever (as on the production mesh)
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", "granite-20b", "--shape", "decode_32k",
+               "--mesh-shape", "2", "4", "--mesh-axes", "data", "model",
+               "--json", out] + (["--variant"] + variant if variant else [])
+        r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                           timeout=520, cwd=ROOT)
+        assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]
+        return json.load(open(out))
+
+    base = run([], "/tmp/kvshard_base.json")
+    shard = run(["kv_shard_model=1"], "/tmp/kvshard_on.json")
+    b0 = base["bytes_per_device_inputs"]
+    b1 = shard["bytes_per_device_inputs"]
+    # cache dominates granite decode; 4-way extra seq sharding > 2x total
+    assert b1 < b0 / 2, (b0, b1)
