@@ -131,6 +131,25 @@ class Client:
             time.sleep(poll_sleep)
         self.pool.shutdown()
 
+    def next_wake(self, now: float) -> float:
+        """Earliest future time this client needs attention absent incoming
+        messages or worker completions: the next health heartbeat or the
+        earliest running task's deadline.  Scheduling hint for the
+        discrete-event simulator; no effect on protocol semantics."""
+        nxt = self._last_health + self.health_interval
+        next_done = getattr(self.pool, "next_completion", lambda: None)()
+        if next_done is not None:
+            nxt = min(nxt, next_done)
+        for tid, t0 in self.pool.running().items():
+            task = self.tasks.get(tid)
+            if task is None:
+                continue
+            deadline = task.timeout()
+            if deadline is not None:
+                # timeout check is strict (now - t0 > deadline)
+                nxt = min(nxt, t0 + deadline + 1e-6)
+        return max(nxt, now + 1e-6)
+
     # ------------------------------------------------------------------
     def _buffer_backup(self, msg: Message):
         if msg.type == MsgType.SWAP_QUEUES:
@@ -153,7 +172,13 @@ class Client:
         t = msg.type
         if t == MsgType.GRANT_TASKS:
             granted = msg.body["tasks"]   # list[(tid, task)]
-            self.outstanding = max(0, self.outstanding - len(granted))
+            # The server echoes how many tasks the request asked for; a
+            # partial grant (fewer tasks than requested) must still settle
+            # the whole request, otherwise the shortfall stays counted as
+            # outstanding forever and this client under-requests for the
+            # rest of the run, idling workers.
+            requested = msg.body.get("requested", len(granted))
+            self.outstanding = max(0, self.outstanding - requested)
             for tid, task in granted:
                 self.tasks[tid] = task
                 self.queue.append(tid)
@@ -183,9 +208,13 @@ class Client:
             self.stopped = False
         elif t == MsgType.SWAP_QUEUES:
             # the backup became the primary: swap the channel pair and
-            # process the backup's buffered (unmatched) messages in order
+            # process the backup's buffered (unmatched) messages in order.
+            # The message carries a fresh backup-channel end (the engine
+            # re-registered the queues) — pointing `backup` at the old
+            # object would double-send every message to the new primary.
             if self.backup is not None:
                 self.primary = self.backup
+            self.backup = (msg.body or {}).get("new_backup")
             buffered, self._backup_buffer = self._backup_buffer, []
             for m in sorted(buffered, key=lambda m: (m.srv_seq or 0)):
                 self._act(m)

@@ -100,6 +100,11 @@ class Server:
         self._backoff = self.config.create_backoff_init
         self._client_counter = 0
         self._instance_birth: dict[str, float] = {}
+        # server<->server heartbeats go out at health_interval cadence (the
+        # same cadence clients use), not once per loop iteration — under the
+        # event-driven simulator a per-step heartbeat would wake the peer,
+        # whose step sends one back, pinging forever at latency granularity
+        self._last_peer_health_sent = -1e18
 
     # ------------------------------------------------------------------
     def now(self) -> float:
@@ -108,7 +113,11 @@ class Server:
     def send_to_client(self, ci: ClientInfo, mtype, body=None):
         msg = Message(mtype, self.name, body, srv_seq=ci.srv_seq)
         ci.srv_seq += 1
-        ci.endpoint.send(msg)
+        # the endpoint can be gone already: a backup may learn of a client
+        # whose instance the primary terminated while the notification was
+        # in flight — the send just goes nowhere, like a deleted VM's queue
+        if ci.endpoint is not None:
+            ci.endpoint.send(msg)
 
     # ------------------------------------------------------------------
     # task assignment (paper §a)
@@ -162,14 +171,21 @@ class Server:
                 for tid, task in granted:
                     self.status[tid] = ASSIGNED
                     ci.assigned[tid] = task
+                # echo the request size so a partial grant still settles the
+                # client's whole outstanding count (see Client._act)
                 self.send_to_client(ci, MsgType.GRANT_TASKS,
-                                    {"tasks": granted})
+                                    {"tasks": granted,
+                                     "requested": msg.body["n"]})
             else:
                 self.send_to_client(ci, MsgType.NO_FURTHER_TASKS)
         elif t == MsgType.RESULT:
             tid = msg.body["tid"]
-            self.results[tid] = tuple(msg.body["result"])
-            self.status[tid] = DONE
+            # Only ASSIGNED tasks may complete: a racy late result for a
+            # task already TIMED_OUT/PRUNED (domino effect) or already DONE
+            # (duplicate copy after takeover) must not corrupt the table.
+            if self.status[tid] == ASSIGNED:
+                self.results[tid] = tuple(msg.body["result"])
+                self.status[tid] = DONE
             ci.assigned.pop(tid, None)
         elif t == MsgType.REPORT_HARD_TASK:
             tid = msg.body["tid"]
@@ -239,9 +255,12 @@ class Server:
     def _step_primary(self):
         now = self.now()
         # 1. health update to the backup
-        if self.backup_endpoint is not None:
+        if self.backup_endpoint is not None \
+                and now - self._last_peer_health_sent \
+                >= self.config.health_interval:
             self.backup_endpoint.send(
                 Message(MsgType.HEALTH_UPDATE, self.name))
+            self._last_peer_health_sent = now
 
         # 2. handshakes (while frozen, only the backup's handshake is
         #    accepted — client handshakes are deferred, per the paper's
@@ -261,7 +280,7 @@ class Server:
         if not self.frozen:
             for cname in list(self.clients):
                 ci = self.clients.get(cname)
-                if ci is None:
+                if ci is None or ci.endpoint is None:
                     continue
                 while True:
                     msg = ci.endpoint.poll()
@@ -472,6 +491,7 @@ class Server:
         srv._backoff = srv.config.create_backoff_init
         srv._client_counter = 10_000   # avoid name collisions with primary
         srv._instance_birth = {}
+        srv._last_peer_health_sent = -1e18
         return srv
 
     def backup_bootstrap(self, primary_endpoint, handshake_send):
@@ -491,7 +511,10 @@ class Server:
     def _step_backup(self):
         now = self.now()
         # health to primary
-        self.primary_endpoint.send(Message(MsgType.HEALTH_UPDATE, self.name))
+        if now - self._last_peer_health_sent >= self.config.health_interval:
+            self.primary_endpoint.send(
+                Message(MsgType.HEALTH_UPDATE, self.name))
+            self._last_peer_health_sent = now
         # messages from the primary
         while True:
             m = self.primary_endpoint.poll()
@@ -516,6 +539,8 @@ class Server:
                 self._direct_buffer.pop(m.body["name"], None)
         # direct copies from clients -> buffer
         for cname, ci in list(self.clients.items()):
+            if ci.endpoint is None:
+                continue   # instance deleted while its registration flew
             while True:
                 m = ci.endpoint.poll()
                 if m is None:
@@ -540,11 +565,18 @@ class Server:
         """The backup becomes the primary (paper §c)."""
         self.role = "primary"
         self.name = "primary*"
-        # swap queues on every client via their (old) primary channels
+        # swap queues on every client via their (old) primary channels; the
+        # engine rotates the channel registry (old backup link -> primary
+        # link) and mints a fresh backup link per client, shipped inside
+        # SWAP_QUEUES — a later backup must not attach to the endpoint this
+        # server now polls, or it would steal client messages
+        rotate = getattr(self.engine, "rotate_client_channels", None)
         for cname, ci in self.clients.items():
             ep = self.engine.primary_endpoints(cname)
+            new_backup = rotate(cname) if rotate is not None else None
             if ep is not None:
-                ep.send(Message(MsgType.SWAP_QUEUES, self.name))
+                ep.send(Message(MsgType.SWAP_QUEUES, self.name,
+                                {"new_backup": new_backup}))
         # process buffered direct messages in order
         for cname in list(self._direct_buffer):
             ci = self.clients.get(cname)
@@ -561,6 +593,17 @@ class Server:
         self.backup_endpoint = None
         self.backup_name = None
         self.backup_pending = False
+
+    # ------------------------------------------------------------------
+    def next_wake(self, now: float) -> float:
+        """Earliest future time this server needs attention absent incoming
+        messages: the next heartbeat tick (which also bounds how late the
+        liveness checks run) or a pending instance-creation backoff expiry.
+        Scheduling hint for the discrete-event simulator only."""
+        nxt = now + self.config.health_interval
+        if self.role == "primary" and now < self._next_create_at:
+            nxt = min(nxt, self._next_create_at)
+        return max(nxt, now + 1e-6)
 
     # ------------------------------------------------------------------
     def run(self, poll_sleep: float = 0.02, stop_when_done: bool = True):

@@ -1,4 +1,4 @@
-"""Deterministic cloud simulator (virtual clock).
+"""Deterministic cloud simulator (virtual clock, discrete-event core).
 
 The paper's local engine "is actually a simulation of performing the
 experiment on the cloud ... a powerful tool to facilitate further
@@ -8,11 +8,30 @@ with scripted instance-creation delays, rate limits, message latency and
 failure injection — so the fault-tolerance protocol (backup mirroring,
 takeover, task reassignment, domino effect) is unit-testable and
 benchmarkable with exact reproducibility.
+
+The core is a **discrete-event engine**: a global event heap holds message
+deliveries, worker completions, instance materializations, script
+callbacks and per-node wake hints (health heartbeats, task deadlines,
+creation-backoff expiries).  ``SimCluster.run()`` jumps the clock to the
+next event and steps only the nodes that event concerns, doing O(events)
+work instead of O(T/dt * nodes) polling.  The legacy fixed-``dt`` polling
+loop is retained behind ``SimParams(mode="fixed")`` as a semantic
+reference for equivalence tests and speedup benchmarks.
+
+Scenario knobs the fixed-step loop could not afford:
+  * heterogeneous instance types — per-kind ``creation_delay``,
+    ``cost_per_instance_second`` and ``client_workers``
+    (``SimParams.instance_types``),
+  * scripted spot-preemption waves (``SimCluster.spot_wave``),
+  * per-message latency jitter from a seeded RNG
+    (``SimParams.latency_jitter`` / ``SimParams.seed``).
 """
 from __future__ import annotations
 
 import heapq
 import itertools
+import math
+import random
 from dataclasses import dataclass, field
 
 from repro.core import transport
@@ -34,6 +53,76 @@ class Clock:
     def advance(self, dt: float):
         self.t += dt
 
+    def advance_to(self, t: float):
+        if t > self.t:
+            self.t = t
+
+
+# wake target meaning "every alive server node" — server-side wires cannot
+# name their poller statically (the acting primary changes at takeover)
+SERVERS = "@servers"
+
+
+class EventLoop:
+    """Global event heap over the virtual clock.
+
+    Entries are ``(time, seq, kind, data)``; ``seq`` makes heap order
+    deterministic for same-time events (insertion order).  ``wake`` entries
+    are deduplicated per target: scheduling a wake at or after an already
+    pending one is a no-op, so periodic rescheduling stays O(1) per event.
+    """
+
+    def __init__(self, clock: Clock):
+        self.clock = clock
+        self._heap: list = []
+        self._seq = itertools.count()
+        self._pending_wake: dict = {}     # target -> earliest scheduled t
+        self.enabled = True               # disabled under mode="fixed"
+        self.processed = 0                # events popped (benchmark metric)
+
+    def schedule(self, t: float, kind: str, data=None):
+        if not self.enabled:
+            return
+        heapq.heappush(self._heap, (t, next(self._seq), kind, data))
+
+    def wake(self, target, t: float, quantum: float = 0.0):
+        """Request that ``target`` be stepped at time ``t`` (coalesced up to
+        ``quantum`` to batch near-simultaneous deliveries into one step)."""
+        if not self.enabled:
+            return
+        if quantum > 0.0:
+            q_t = math.ceil(round(t / quantum, 9)) * quantum
+            if q_t < t:        # float fuzz must never round below t, or a
+                q_t += quantum  # delivery could be polled before it's due
+            t = q_t
+        cur = self._pending_wake.get(target)
+        if cur is not None and cur <= t:
+            return
+        self._pending_wake[target] = t
+        self.schedule(t, "wake", target)
+
+    def next_time(self) -> float | None:
+        return self._heap[0][0] if self._heap else None
+
+    def pop_due(self, now: float) -> list:
+        out = []
+        while self._heap and self._heap[0][0] <= now:
+            ev = heapq.heappop(self._heap)
+            self.processed += 1
+            if ev[2] == "wake" and self._pending_wake.get(ev[3]) == ev[0]:
+                del self._pending_wake[ev[3]]
+            out.append(ev)
+        return out
+
+
+@dataclass
+class InstanceType:
+    """Per-kind overrides of the scalar SimParams fields (None -> inherit)."""
+    creation_delay: float | None = None
+    cost_per_instance_second: float | None = None
+    client_workers: int | None = None
+    preemptible: bool = True            # spot waves only hit preemptible kinds
+
 
 @dataclass
 class SimParams:
@@ -41,28 +130,81 @@ class SimParams:
     min_create_interval: float = 0.5   # platform rate limit
     client_workers: int = 4            # CPUs per client instance
     latency: float = 0.01              # message latency
-    dt: float = 0.05                   # step size
+    dt: float = 0.05                   # step size (mode="fixed" only)
     cost_per_instance_second: float = 1.0
+    mode: str = "events"               # "events" | "fixed" (legacy polling)
+    latency_jitter: float = 0.0        # U[0, jitter) extra delay per message
+    seed: int = 0                      # RNG seed (jitter + spot waves)
+    wake_quantum: float = 0.05         # server wake coalescing granularity
+    client_health_interval: float = 1.0   # heartbeat cadence of sim clients
+    instance_types: dict = field(default_factory=dict)  # kind -> InstanceType
 
 
 class SimEngine(AbstractEngine):
     def __init__(self, clock: Clock, params: SimParams | None = None):
         self.clock = clock
         self.params = params or SimParams()
+        self.loop = EventLoop(clock)
+        self.loop.enabled = self.params.mode != "fixed"
+        self.rng = random.Random(self.params.seed)
         self.pending: dict[str, PendingInstance] = {}
         self.nodes: dict[str, object] = {}      # name -> Client|Server
+        self.server_nodes: dict[str, Server] = {}   # subset of nodes
         self.alive: dict[str, bool] = {}
         self._instances: dict[str, float] = {}  # name -> created_at (billing)
         self._stopped_at: dict[str, float] = {}
+        self._rates: dict[str, float] = {}      # name -> $/instance-second
+        self._kinds: dict[str, str] = {}        # name -> instance kind
+        self._boot_eps: dict[str, tuple] = {}   # name -> client-side endpoints
         self._to_create: list = []              # (t, kind, name, payload)
         self._last_create = -1e18
         self._primary_eps: dict[str, transport.SimEndpoint] = {}
         self._backup_eps: dict[str, transport.SimEndpoint] = {}
         self._client_eps: dict[str, tuple] = {}
-        hs_srv, hs_cli = transport.sim_link(clock, self.params.latency)
+        # handshake is a control-plane wire: no jitter, so an instance's
+        # HANDSHAKE is never observed after protocol messages it precedes
+        hs_srv, hs_cli = transport.sim_link(
+            clock, self.params.latency, notify_a=self._notify(SERVERS))
         self.handshake_recv = hs_srv
         self._handshake_send = hs_cli
-        self.cost_log: list = []                # (name, start, end)
+        self.cost_log: list = []                # (name, start, end, rate)
+        # SimCluster clears this when the server config disables backups:
+        # without a backup server the two-copy wires are never drained, so
+        # minting them only doubles every client send
+        self.backup_links = True
+
+    # ------------------------------------------------------------------
+    # event plumbing
+    # ------------------------------------------------------------------
+    def _notify(self, target):
+        if target is None:
+            return None
+        quantum = self.params.wake_quantum if target == SERVERS else 0.0
+
+        def cb(t, _target=target, _q=quantum):
+            self.loop.wake(_target, t, _q)
+        return cb
+
+    def _link(self, recv_a=None, recv_b=None):
+        return transport.sim_link(
+            self.clock, self.params.latency,
+            jitter=self.params.latency_jitter, rng=self.rng,
+            notify_a=self._notify(recv_a), notify_b=self._notify(recv_b))
+
+    # ------------------------------------------------------------------
+    # heterogeneous instance types
+    # ------------------------------------------------------------------
+    def _type_attr(self, kind: str, attr: str):
+        itype = self.params.instance_types.get(kind)
+        if itype is not None:
+            val = getattr(itype, attr)
+            if val is not None:
+                return val
+        return getattr(self.params, attr)
+
+    def preemptible(self, name: str) -> bool:
+        itype = self.params.instance_types.get(self._kinds.get(name, ""))
+        return itype.preemptible if itype is not None else True
 
     # ------------------------------------------------------------------
     def now(self) -> float:
@@ -73,15 +215,45 @@ class SimEngine(AbstractEngine):
         if now - self._last_create < self.params.min_create_interval:
             raise RateLimited()
         self._last_create = now
-        heapq.heappush(self._to_create,
-                       (now + self.params.creation_delay, kind, name, payload))
+        due = now + self._type_attr(kind, "creation_delay")
+        # Register the pending record at *creation request* time, exactly
+        # like LocalEngine/GCEEngine do — the server's max_clients gate
+        # counts len(engine.pending), so deferring registration to
+        # materialization silently over-creates instances while they boot.
+        self._kinds[name] = kind
+        if kind.startswith("backup"):
+            pb_primary, pb_backup = self._link(recv_a=SERVERS,
+                                               recv_b=SERVERS)
+            self.pending[name] = PendingInstance(
+                name, kind, now, primary_side=pb_primary, payload=payload)
+            self._boot_eps[name] = (pb_backup,)
+        else:
+            p_srv, p_cli = self._link(recv_a=SERVERS, recv_b=name)
+            self._primary_eps[name] = p_srv
+            if self.backup_links:
+                b_srv, b_cli = self._link(recv_a=SERVERS, recv_b=name)
+                self._backup_eps[name] = b_srv
+            else:
+                b_srv = b_cli = None
+            self.pending[name] = PendingInstance(
+                name, kind, now, primary_side=p_srv, backup_side=b_srv)
+            self._boot_eps[name] = (p_cli, b_cli)
+        heapq.heappush(self._to_create, (due, kind, name, payload))
+        self.loop.schedule(due, "materialize")
 
     def terminate_instance(self, name):
         self.nodes.pop(name, None)
+        self.server_nodes.pop(name, None)
         self.alive.pop(name, None)
         self.pending.pop(name, None)
+        self._boot_eps.pop(name, None)
+        self._primary_eps.pop(name, None)
+        self._backup_eps.pop(name, None)
+        self._kinds.pop(name, None)
         if name in self._instances:
-            self.cost_log.append((name, self._instances.pop(name), self.now()))
+            rate = self._rates.pop(name, self.params.cost_per_instance_second)
+            self.cost_log.append(
+                (name, self._instances.pop(name), self.now(), rate))
 
     def list_instances(self):
         return list(self._instances)
@@ -91,6 +263,21 @@ class SimEngine(AbstractEngine):
 
     def backup_endpoint(self, name):
         return self._backup_eps.get(name)
+
+    def rotate_client_channels(self, name):
+        """Takeover bookkeeping: the backup-turned-primary now serves the
+        client over the old *backup* link, so that link becomes the
+        client's primary link and a fresh backup link is minted for the
+        next backup server.  Returns the client-side end of the fresh link
+        (shipped to the client inside SWAP_QUEUES).  Without this, a
+        post-takeover backup would attach to the same endpoint the acting
+        primary polls and steal its client messages."""
+        old_b = self._backup_eps.get(name)
+        if old_b is not None:
+            self._primary_eps[name] = old_b
+        b_srv, b_cli = self._link(recv_a=SERVERS, recv_b=name)
+        self._backup_eps[name] = b_srv
+        return b_cli
 
     # ------------------------------------------------------------------
     def kill(self, name):
@@ -107,39 +294,42 @@ class SimEngine(AbstractEngine):
         now = self.now()
         while self._to_create and self._to_create[0][0] <= now:
             _, kind, name, payload = heapq.heappop(self._to_create)
-            if kind == "client":
-                p_srv, p_cli = transport.sim_link(self.clock,
-                                                  self.params.latency)
-                b_srv, b_cli = transport.sim_link(self.clock,
-                                                  self.params.latency)
-                self._primary_eps[name] = p_srv
-                self._backup_eps[name] = b_srv
-                pool = SimWorkerPool(self.params.client_workers, self.clock)
-                client = Client(name, p_cli, b_cli, pool,
-                                clock=self.clock.now,
-                                handshake=self._handshake_send)
-                self.nodes[name] = client
-                self.alive[name] = True
-                self._instances[name] = now
-                self.pending[name] = PendingInstance(
-                    name, kind, now, primary_side=p_srv, backup_side=b_srv)
-            elif kind == "backup":
-                pb_primary, pb_backup = transport.sim_link(
-                    self.clock, self.params.latency)
+            boot = self._boot_eps.pop(name, None)
+            if boot is None or name not in self.pending:
+                continue   # creation was cancelled while booting
+            self._instances[name] = now
+            self._rates[name] = self._type_attr(
+                kind, "cost_per_instance_second")
+            self.alive[name] = True
+            if kind.startswith("backup"):
+                (pb_backup,) = boot
                 srv = Server.from_snapshot(payload, self, name)
                 srv.backup_bootstrap(primary_endpoint=pb_backup,
                                      handshake_send=self._handshake_send)
                 self.nodes[name] = srv
-                self.alive[name] = True
-                self._instances[name] = now
-                self.pending[name] = PendingInstance(
-                    name, kind, now, primary_side=pb_primary)
+                self.server_nodes[name] = srv
+                self.loop.wake(SERVERS, now)
+            else:
+                p_cli, b_cli = boot
+                pool = SimWorkerPool(
+                    self._type_attr(kind, "client_workers"), self.clock,
+                    notify=self._notify(name))
+                client = Client(name, p_cli, b_cli, pool,
+                                clock=self.clock.now,
+                                handshake=self._handshake_send,
+                                health_interval=self.params
+                                .client_health_interval)
+                self.nodes[name] = client
+                self.loop.wake(name, now)
 
     def total_cost(self) -> float:
         now = self.now()
-        cost = sum(end - start for _, start, end in self.cost_log)
-        cost += sum(now - start for start in self._instances.values())
-        return cost * self.params.cost_per_instance_second
+        base = self.params.cost_per_instance_second
+        cost = sum((end - start) * rate
+                   for _, start, end, rate in self.cost_log)
+        cost += sum((now - start) * self._rates.get(name, base)
+                    for name, start in self._instances.items())
+        return cost
 
 
 # ---------------------------------------------------------------------------
@@ -154,15 +344,33 @@ class SimCluster:
         self.clock = Clock()
         self.params = params or SimParams()
         self.engine = SimEngine(self.clock, self.params)
+        self.loop = self.engine.loop
         self.server = Server(tasks, self.engine, config)
+        self.engine.backup_links = self.server.config.use_backup
         self.engine._instances["primary"] = 0.0
         self.engine.alive["primary"] = True
         self._script: list = []   # (t, fn) sorted
         self._primary_killed = False
+        self.loop.wake(SERVERS, 0.0)
 
     def at(self, t: float, fn):
         self._script.append((t, fn))
         self._script.sort(key=lambda x: x[0])
+        self.loop.schedule(t, "script")
+
+    def spot_wave(self, t: float, fraction: float):
+        """Script a spot-preemption wave: at time ``t`` kill ``fraction`` of
+        the alive preemptible client instances (engine RNG, seeded)."""
+        def fn(c):
+            eng = c.engine
+            victims = [name for name, node in eng.nodes.items()
+                       if isinstance(node, Client)
+                       and eng.alive.get(name, False)
+                       and eng.preemptible(name)]
+            k = min(int(round(len(victims) * fraction)), len(victims))
+            for name in eng.rng.sample(victims, k):
+                eng.kill(name)
+        self.at(t, fn)
 
     def kill_primary(self):
         self.engine.alive["primary"] = False
@@ -173,23 +381,89 @@ class SimCluster:
                 if isinstance(n, Client)]
 
     def servers(self) -> list[Server]:
+        """Alive server nodes, keyed by the engine registry (a node's own
+        ``name`` attribute becomes "primary*" after takeover and must not
+        be used for liveness lookups)."""
         out = []
         if self.engine.alive.get("primary", False):
             out.append(self.server)
-        out += [n for n in self.engine.nodes.values()
-                if isinstance(n, Server) and self.engine.alive.get(n.name if n.name in self.engine.alive else "", True)]
+        out += [n for key, n in self.engine.server_nodes.items()
+                if self.engine.alive.get(key, False)]
         return out
 
     def acting_primary(self) -> Server | None:
-        for n in self.engine.nodes.values():
-            if isinstance(n, Server) and n.role == "primary" \
-                    and self.engine.alive.get(_node_name(self.engine, n), True):
+        for key, n in self.engine.server_nodes.items():
+            if n.role == "primary" and self.engine.alive.get(key, False):
                 return n
         if self.engine.alive.get("primary", False):
             return self.server
         return None
 
+    # ------------------------------------------------------------------
+    # discrete-event stepping
+    # ------------------------------------------------------------------
     def step(self):
+        if self.params.mode == "fixed":
+            self._step_fixed()
+        else:
+            self._step_events()
+
+    def _step_events(self):
+        """Jump the clock to the next scheduled event and process every
+        event due at that instant, stepping only the nodes concerned."""
+        t = self.loop.next_time()
+        if t is None:
+            # quiescent (nothing scheduled): nudge time forward so callers
+            # looping on step() still make progress
+            self.clock.advance(self.params.dt)
+        else:
+            self.clock.advance_to(t)
+        now = self.clock.now()
+        events = self.loop.pop_due(now)
+
+        # script callbacks fire first (matches the fixed-step loop order)
+        while self._script and self._script[0][0] <= now:
+            _, fn = self._script.pop(0)
+            fn(self)
+        self.engine.materialize_due()
+
+        wake_servers = False
+        wake_clients: list = []
+        for _, _, kind, data in events:
+            if kind == "wake":
+                if data == SERVERS:
+                    wake_servers = True
+                else:
+                    wake_clients.append(data)
+            elif kind in ("script", "materialize"):
+                # handled above; a script may also demand a server step
+                # (e.g. a kill that the survivors must react to)
+                wake_servers = True
+
+        if wake_servers:
+            self._step_servers(now)
+        for name in wake_clients:
+            node = self.engine.nodes.get(name)
+            if node is None or not self.engine.alive.get(name, False):
+                continue
+            node.step()
+            self.loop.wake(name, node.next_wake(now))
+
+    def _step_servers(self, now: float):
+        nxt = None
+        for srv in self.servers():
+            srv.step()
+            w = srv.next_wake(now)
+            nxt = w if nxt is None else min(nxt, w)
+        if nxt is not None:
+            # intrinsic wakes (heartbeats, creation backoffs) stay exact;
+            # only message-delivery wakes are coalesced by wake_quantum
+            self.loop.wake(SERVERS, nxt)
+
+    # ------------------------------------------------------------------
+    # legacy fixed-dt stepping (semantic reference; O(T/dt * nodes))
+    # ------------------------------------------------------------------
+    def _step_fixed(self):
         now = self.clock.now()
         while self._script and self._script[0][0] <= now:
             _, fn = self._script.pop(0)
@@ -206,8 +480,13 @@ class SimCluster:
     def run(self, until: float = 1e9, max_steps: int = 200_000,
             stop_when_done: bool = True) -> Server:
         """Steps until some acting primary reports done. Returns it."""
+        events_mode = self.params.mode != "fixed"
         for _ in range(max_steps):
-            if self.clock.now() >= until:
+            if events_mode:
+                nt = self.loop.next_time()
+                if nt is None or nt >= until:
+                    break
+            elif self.clock.now() >= until:
                 break
             self.step()
             if stop_when_done:
@@ -221,20 +500,13 @@ class SimCluster:
             f"simulation did not finish by t={self.clock.now():.1f}")
 
     def _done_primary(self):
-        if self.engine.alive.get("primary", False) and self.server.done:
-            return self.server
-        for name, node in self.engine.nodes.items():
-            if isinstance(node, Server) and node.role == "primary" \
+        if self.engine.alive.get("primary", False):
+            return self.server if self.server.done else None
+        for name, node in self.engine.server_nodes.items():
+            if node.role == "primary" \
                     and self.engine.alive.get(name, False) and node.done:
                 return node
         return None
-
-
-def _node_name(engine, node):
-    for k, v in engine.nodes.items():
-        if v is node:
-            return k
-    return ""
 
 
 # ---------------------------------------------------------------------------

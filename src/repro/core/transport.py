@@ -64,18 +64,37 @@ def mp_pipe(manager):
 # simulated transport (SimEngine)
 # ---------------------------------------------------------------------------
 class SimWire:
-    """One-directional wire with latency on a virtual clock."""
+    """One-directional wire with latency on a virtual clock.
 
-    def __init__(self, clock, latency: float = 0.0):
+    ``on_deliver`` (optional) is called with the delivery timestamp of every
+    accepted message — the discrete-event engine uses it to wake the
+    receiving node exactly when the message becomes readable, instead of
+    polling every ``dt``.  ``jitter`` adds U[0, jitter) seconds per message
+    from a seeded ``rng`` (delivery order within a wire stays FIFO: a
+    message is never readable before its predecessors)."""
+
+    def __init__(self, clock, latency: float = 0.0, jitter: float = 0.0,
+                 rng=None, on_deliver=None):
         self._clock = clock
         self.latency = latency
+        self.jitter = jitter
+        self._rng = rng
         self._q = collections.deque()   # (deliver_at, msg)
         self.broken = False             # scripted link failure
+        self.on_deliver = on_deliver
 
     def put(self, msg):
         if self.broken:
             return  # dropped, like a dead instance's socket
-        self._q.append((self._clock.now() + self.latency, msg))
+        delay = self.latency
+        if self.jitter > 0.0 and self._rng is not None:
+            delay += self._rng.uniform(0.0, self.jitter)
+        deliver_at = self._clock.now() + delay
+        if self._q and self._q[-1][0] > deliver_at:
+            deliver_at = self._q[-1][0]   # FIFO: never overtake
+        self._q.append((deliver_at, msg))
+        if self.on_deliver is not None:
+            self.on_deliver(deliver_at)
 
     def get(self):
         if self._q and self._q[0][0] <= self._clock.now():
@@ -99,7 +118,12 @@ class SimEndpoint(Endpoint):
         self._recv.broken = True
 
 
-def sim_link(clock, latency: float = 0.0):
-    """Returns (endpoint_a, endpoint_b) — a two-way simulated link."""
-    ab, ba = SimWire(clock, latency), SimWire(clock, latency)
+def sim_link(clock, latency: float = 0.0, jitter: float = 0.0, rng=None,
+             notify_a=None, notify_b=None):
+    """Returns (endpoint_a, endpoint_b) — a two-way simulated link.
+
+    ``notify_a``/``notify_b`` are delivery callbacks for messages *received*
+    by endpoint a / endpoint b respectively (wire direction b->a feeds a)."""
+    ab = SimWire(clock, latency, jitter, rng, on_deliver=notify_b)
+    ba = SimWire(clock, latency, jitter, rng, on_deliver=notify_a)
     return SimEndpoint(ab, ba), SimEndpoint(ba, ab)

@@ -91,13 +91,18 @@ class ProcessWorkerPool:
 
 class SimWorkerPool:
     """Virtual-clock pool: each task must carry ``sim_duration`` (seconds of
-    virtual time); completion fires when the clock passes start+duration."""
+    virtual time); completion fires when the clock passes start+duration.
 
-    def __init__(self, n_workers: int, clock):
+    ``notify`` (optional, set by the discrete-event engine) is called with
+    the timestamp of every scheduled completion so the owning client is
+    woken exactly then instead of being polled every ``dt``."""
+
+    def __init__(self, n_workers: int, clock, notify=None):
         self.n_workers = n_workers
         self._clock = clock
         self._running: dict[int, tuple] = {}   # id -> (task, start, end)
         self._pending_started: list[int] = []
+        self.notify = notify
 
     def idle(self) -> int:
         return self.n_workers - len(self._running)
@@ -105,11 +110,21 @@ class SimWorkerPool:
     def running(self) -> dict[int, float]:
         return {tid: t0 for tid, (_, t0, _) in self._running.items()}
 
+    def next_completion(self) -> float | None:
+        """Earliest scheduled completion time, or None when idle (used by
+        the client's next_wake hint)."""
+        if not self._running:
+            return None
+        return min(end for _, _, end in self._running.values())
+
     def start(self, task_id: int, task) -> None:
         now = self._clock.now()
         dur = getattr(task, "sim_duration", 1.0)
         self._running[task_id] = (task, now, now + dur)
         self._pending_started.append(task_id)
+        if self.notify is not None:
+            self.notify(now)            # emit STARTED promptly
+            self.notify(now + dur)      # wake at completion
 
     def poll(self) -> list[WorkerEvent]:
         events = [WorkerEvent(WorkerEvent.STARTED, tid)

@@ -1,6 +1,9 @@
 """Hardness lattice + min_hard antichain: unit + hypothesis property tests."""
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.hardness import Hardness, MinHardSet
 

@@ -1,6 +1,10 @@
 """Hypothesis property tests over random workloads: scheduler invariants
 hold for arbitrary hardness lattices / durations / deadlines / failures."""
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.hardness import Hardness
 from repro.core.server import ServerConfig
