@@ -1,0 +1,142 @@
+"""Cost-aware scheduling benchmark: scaling/budget policies + CostMeter.
+
+Quantifies the paper's "budget-effective" claim with the pluggable policy
+layer on a cost model with per-instance minimum billing (clouds bill a
+minimum commitment per started instance, so over-provisioning is real
+money, not just a BYE round trip):
+
+  * fixed-fleet vs demand scaling on a ramp-bound sweep — the fixed
+    policy creates instances as long as any task is assignable and boots
+    a fleet the workload can't fill; demand scaling stops once committed
+    worker capacity covers the remaining work,
+  * a user-set budget cap on the fixed policy — scaling halts when the
+    projected spend threatens the cap; the run still solves everything,
+    just with a smaller fleet.
+
+Results land in BENCH_sched.json at the repo root.
+
+Usage:
+    PYTHONPATH=src python benchmarks/sched_cost_bench.py [--smoke] [--out F]
+
+``--smoke`` asserts the demand-scaling saving floor and the budget cap,
+for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.core.policy import CostMeter                    # noqa: E402
+from repro.core.server import ServerConfig                 # noqa: E402
+from repro.core.sim import SimCluster, SimParams, SimTask  # noqa: E402
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+N_TASKS = 24
+TASK_S = 30.0
+MAX_CLIENTS = 16
+WORKERS = 4
+MIN_BILLING_S = 60.0
+BUDGET_CAP = 400.0
+BUDGET_RESERVE_S = 90.0
+
+
+def _workload():
+    return [SimTask((i, 0), ("n", "id"), (i,), TASK_S, None, (i,))
+            for i in range(1, N_TASKS + 1)]
+
+
+def _run(scale: str, budget_cap: float | None = None) -> dict:
+    cfg = ServerConfig(max_clients=MAX_CLIENTS, use_backup=False,
+                       workers_hint=WORKERS, scale_policy=scale,
+                       budget_cap=budget_cap,
+                       budget_reserve_s=BUDGET_RESERVE_S)
+    cl = SimCluster(_workload(), cfg,
+                    SimParams(client_workers=WORKERS, seed=0,
+                              min_billing_s=MIN_BILLING_S))
+    t0 = time.perf_counter()
+    srv = cl.run(until=3600)
+    # let the BYE round trips drain so every client instance is closed
+    steps = 0
+    while len(cl.engine.list_instances()) > 1 and steps < 3000:
+        cl.step()
+        steps += 1
+    wall = time.perf_counter() - t0
+    now = cl.clock.now()
+    meter = CostMeter()
+    meter.sync(cl.engine.billing_records())
+    assert srv.final_results.cost is not None \
+        and srv.final_results.cost["total"] > 0, "cost column not populated"
+    assert srv.final_results.row_costs is not None \
+        and any(c is not None for c in srv.final_results.row_costs)
+    return {
+        "scale_policy": scale,
+        "budget_cap": budget_cap,
+        "clients_created": sum(1 for _, k in cl.engine._kinds.items()
+                               if k == "client"),
+        "solved": sum(1 for _, r, _ in srv.final_results.rows
+                      if r is not None),
+        "tasks": len(srv.final_results.rows),
+        "makespan_s": round(now, 1),
+        "total_cost": round(meter.accrued(now), 1),
+        "client_cost": round(meter.by_kind(now).get("client", 0.0), 1),
+        "cost_at_done": srv.final_results.cost["total"],
+        "wall_s": round(wall, 4),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="assert saving floor + budget cap (CI)")
+    ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_sched.json"))
+    args = ap.parse_args(argv)
+
+    fixed = _run("fixed")
+    demand = _run("demand")
+    capped = _run("fixed", budget_cap=BUDGET_CAP)
+    saving = 1.0 - demand["client_cost"] / max(fixed["client_cost"], 1e-9)
+
+    for r in (fixed, demand, capped):
+        cap = f" cap={r['budget_cap']}" if r["budget_cap"] else ""
+        print(f"{r['scale_policy']:6s}{cap:9s}: "
+              f"{r['clients_created']:2d} clients, "
+              f"cost {r['total_cost']:7.1f}, "
+              f"makespan {r['makespan_s']:6.1f}s, "
+              f"solved {r['solved']}/{r['tasks']}")
+    print(f"demand-scaling client-cost saving: {100 * saving:.0f}%")
+
+    out = {
+        "bench": "sched_cost",
+        "scenario": {
+            "n_tasks": N_TASKS, "task_s": TASK_S,
+            "max_clients": MAX_CLIENTS, "workers": WORKERS,
+            "min_billing_s": MIN_BILLING_S,
+        },
+        "fixed": fixed,
+        "demand": demand,
+        "budget_capped": capped,
+        "demand_saving_pct": round(100 * saving, 1),
+    }
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out}")
+
+    if args.smoke:
+        # regression tripwires (virtual clock -> deterministic, not noisy)
+        assert fixed["solved"] == demand["solved"] == capped["solved"] \
+            == N_TASKS, out
+        assert out["demand_saving_pct"] >= 25.0, out
+        assert capped["total_cost"] <= BUDGET_CAP, out
+        assert capped["clients_created"] < fixed["clients_created"], out
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -158,6 +158,10 @@ def main():
     ap.add_argument("--deadline", type=float, default=2.0)
     ap.add_argument("--min-group-size", type=int, default=2)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--scale", choices=["fixed", "demand"], default="fixed",
+                    help="fleet-scaling policy (see repro.core.policy)")
+    ap.add_argument("--budget-cap", type=float, default=None,
+                    help="stop scaling when this spend cap is threatened")
     args = ap.parse_args()
 
     from repro.core.server import Server, ServerConfig
@@ -165,7 +169,9 @@ def main():
     tasks = build_tasks(args.max_n, args.instances, args.deadline)
     print(f"{len(tasks)} tasks")
     config = ServerConfig(min_group_size=args.min_group_size,
-                          max_clients=3, out_dir=args.out)
+                          max_clients=3, out_dir=args.out,
+                          workers_hint=4, scale_policy=args.scale,
+                          budget_cap=args.budget_cap)
     if args.engine == "sim":
         from repro.core.sim import SimCluster, SimParams
 
@@ -174,7 +180,8 @@ def main():
         srv = cluster.run(until=3600)
         table = srv.final_results
         print(f"simulated makespan {cluster.clock.now():.1f}s, "
-              f"cost {cluster.engine.total_cost():.0f} instance-seconds")
+              f"cost {table.cost['total']:.0f} instance-seconds "
+              f"(by kind: {table.cost['by_kind']})")
     else:
         from repro.core.engine import LocalEngine
 

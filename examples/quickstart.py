@@ -36,10 +36,11 @@ print("    solved:",
       [p[0] for p, r, s in server.final_results.rows if r is not None],
       "| pruned by domino:",
       [p[0] for p, r, s in server.final_results.rows if s == "pruned"])
+cost = server.final_results.cost   # CostMeter summary, engine -> results
 print(f"    makespan {cluster.clock.now():.1f}s simulated in "
       f"{cluster.loop.processed} events, "
-      f"cost {cluster.engine.total_cost():.0f} "
-      f"(rate-weighted instance-seconds)")
+      f"cost {cost['total']:.0f} (rate-weighted instance-seconds, "
+      f"by kind: {cost['by_kind']})")
 
 # ---------------------------------------------------------------- 2. train
 from repro.configs import reduced_config

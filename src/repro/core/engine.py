@@ -60,6 +60,25 @@ class AbstractEngine:
     def list_instances(self) -> list:
         raise NotImplementedError
 
+    # --- instance-kind registry -------------------------------------
+    # Engines record the kind passed to create_instance so protocol code
+    # (e.g. takeover's dangling-instance cleanup) never has to infer an
+    # instance's role from its name.
+    def instance_kind(self, name: str) -> str | None:
+        return getattr(self, "_kinds", {}).get(name)
+
+    # --- cost accounting ---------------------------------------------
+    # ``billing_records()`` yields (name, kind, rate, start, end|None)
+    # tuples the server's CostMeter syncs from; ``cost_rate`` is the
+    # $/instance-second of one instance of ``kind``.  The base engine
+    # bills nothing; concrete engines override (exact virtual-clock
+    # accounting on SimEngine, wall-clock proxies on LocalEngine/GCE).
+    def billing_records(self) -> list:
+        return []
+
+    def cost_rate(self, kind: str) -> float:
+        return 1.0
+
     # server-side attach: engines own the handshake channel + endpoint books
     handshake_recv: transport.Channel
     pending: dict
@@ -98,6 +117,8 @@ class LocalEngine(AbstractEngine):
         self._hq = self._mgr.Queue()
         self.handshake_recv = transport.MPChannel(self._hq, self._hq)
         self.n_workers = n_workers_per_client or max(1, mp.cpu_count())
+        self._kinds: dict[str, str] = {}
+        self._billing: dict[str, list] = {}   # name -> [kind, rate, t0, t1]
 
     def now(self) -> float:
         return time.time()
@@ -113,6 +134,8 @@ class LocalEngine(AbstractEngine):
             daemon=False)  # clients spawn worker processes (no daemon)
         proc.start()
         self._procs[name] = proc
+        self._kinds[name] = kind
+        self._billing[name] = [kind, self.cost_rate(kind), self.now(), None]
         self.pending[name] = PendingInstance(
             name, kind, self.now(), primary_side=server_side)
 
@@ -122,6 +145,14 @@ class LocalEngine(AbstractEngine):
             p.terminate()
             p.join(timeout=5)
         self.pending.pop(name, None)
+        rec = self._billing.get(name)
+        if rec is not None and rec[3] is None:
+            rec[3] = self.now()
+
+    def billing_records(self):
+        """Wall-clock proxy billing: one cost unit per instance-second."""
+        return [(name, kind, rate, t0, t1)
+                for name, (kind, rate, t0, t1) in self._billing.items()]
 
     def list_instances(self):
         return list(self._procs)
@@ -149,9 +180,23 @@ class GCEEngine(AbstractEngine):
         self.config = dict(config)
         self._run = runner or self._default_runner
         self.pending: dict[str, PendingInstance] = {}
+        self._kinds: dict[str, str] = {}
+        self._billing: dict[str, list] = {}   # name -> [kind, rate, t0, t1]
 
     def now(self) -> float:
         return time.time()
+
+    def cost_rate(self, kind: str) -> float:
+        """$/instance-second; configurable per kind via the optional
+        ``cost_rates`` config key (scalar or kind->rate mapping)."""
+        rates = self.config.get("cost_rates", 1.0)
+        if isinstance(rates, dict):
+            return float(rates.get(kind, 1.0))
+        return float(rates)
+
+    def billing_records(self):
+        return [(name, kind, rate, t0, t1)
+                for name, (kind, rate, t0, t1) in self._billing.items()]
 
     @staticmethod
     def _default_runner(cmd: list[str]) -> str:
@@ -192,11 +237,16 @@ class GCEEngine(AbstractEngine):
 
     def create_instance(self, kind, name, payload=None):
         self._run(self.create_command(kind, name))
+        self._kinds[name] = kind
+        self._billing[name] = [kind, self.cost_rate(kind), self.now(), None]
         self.pending[name] = PendingInstance(name, kind, self.now())
 
     def terminate_instance(self, name):
         self._run(self.delete_command(name))
         self.pending.pop(name, None)
+        rec = self._billing.get(name)
+        if rec is not None and rec[3] is None:
+            rec[3] = self.now()
 
     def list_instances(self):
         out = self._run(self.list_command())

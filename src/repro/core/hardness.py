@@ -20,8 +20,14 @@ class Hardness:
     values: tuple
 
     def geq(self, other: "Hardness") -> bool:
-        """self as hard or harder than other (componentwise >=)."""
-        assert len(self.values) == len(other.values), "incomparable arities"
+        """self as hard or harder than other (componentwise >=).
+
+        Raises ValueError on arity mismatch — an ``assert`` would vanish
+        under ``python -O`` and silently compare truncated tuples."""
+        if len(self.values) != len(other.values):
+            raise ValueError(
+                f"incomparable hardness arities: {len(self.values)} "
+                f"vs {len(other.values)}")
         return all(a >= b for a, b in zip(self.values, other.values))
 
     def __le__(self, other):

@@ -44,12 +44,18 @@ class ResultsTable:
     result_titles: tuple
     rows: list                      # [(params, result, status)]
     dropped_groups: list = field(default_factory=list)
+    # cost accounting (CostMeter, threaded engine -> server -> here):
+    # per-row attributed cost (seconds the task ran x its instance's
+    # $/instance-second rate; None for unsolved rows) + run-level summary
+    row_costs: list | None = None
+    cost: dict | None = None
 
     @classmethod
     def build(cls, tasks, original_index, status, results,
-              min_group_size: int = 0) -> "ResultsTable":
+              min_group_size: int = 0, task_costs: dict | None = None,
+              cost: dict | None = None) -> "ResultsTable":
         if not tasks:
-            return cls((), (), [])
+            return cls((), (), [], cost=cost)
         # group retention: a group is kept if #solved >= min_group_size
         solved_per_group = collections.Counter()
         for tid, task in enumerate(tasks):
@@ -65,17 +71,22 @@ class ResultsTable:
         by_original = sorted(range(len(tasks)),
                              key=lambda i: original_index[i])
         rows = []
+        row_costs = [] if task_costs is not None else None
         for tid in by_original:
             task = tasks[tid]
             if min_group_size > 0 and task.group_key() in dropped:
                 continue
             rows.append((task.parameters(), results.get(tid),
                          status[tid]))
+            if row_costs is not None:
+                row_costs.append(task_costs.get(tid))
         return cls(
             parameter_titles=tasks[0].parameter_titles(),
             result_titles=tasks[0].result_titles(),
             rows=rows,
             dropped_groups=sorted(dropped),
+            row_costs=row_costs,
+            cost=cost,
         )
 
     # ------------------------------------------------------------------
@@ -83,17 +94,25 @@ class ResultsTable:
         return [(p, r) for p, r, s in self.rows if r is not None]
 
     def to_csv(self) -> str:
+        cost_col = ("cost",) if self.row_costs is not None else ()
         header = ",".join(map(str, self.parameter_titles + self.result_titles
-                              + ("status",)))
+                              + ("status",) + cost_col))
         lines = [header]
-        for params, result, status in self.rows:
+        for i, (params, result, status) in enumerate(self.rows):
             res = result if result is not None else ("",) * len(
                 self.result_titles)
+            cost = ()
+            if self.row_costs is not None:
+                c = self.row_costs[i]
+                cost = (f"{c:.6g}" if c is not None else "",)
             lines.append(",".join(map(str, tuple(params) + tuple(res)
-                                      + (status,))))
+                                      + (status,) + cost)))
         return "\n".join(lines)
 
     def write(self, out_dir: str):
         os.makedirs(out_dir, exist_ok=True)
         with open(os.path.join(out_dir, "results.csv"), "w") as f:
             f.write(self.to_csv() + "\n")
+        if self.cost is not None:
+            with open(os.path.join(out_dir, "cost.json"), "w") as f:
+                json.dump(self.cost, f, indent=2)

@@ -1,0 +1,511 @@
+"""Pure scheduler core — a deterministic state machine over typed events.
+
+The paper's primary-server loop is split in three here (motivated by
+JobPruner's policy/mechanism separation and by Gent & Kotthoff's case for
+deterministic replay on unreliable virtualized hardware):
+
+  * **core** (this module): ``SchedulerCore`` owns the task table, the
+    ``MinHardSet`` pruning antichain and the client bookkeeping.  It
+    consumes typed events — ``ClientMessage``, ``ClientJoined``,
+    ``ClientLost``, ``Tick`` — and emits typed effects — ``Send``,
+    ``CreateInstance``, ``TerminateInstance``.  It imports **no**
+    transport or engine code: the same event stream always produces the
+    same effect stream and the same ``snapshot()``, which is what makes
+    backup takeover "replay the forwarded stream into the same core".
+  * **policies** (``repro.core.policy``): assignment order, fleet
+    scaling and budget enforcement are strategy objects the core
+    consults; they are rebuilt deterministically from the config.
+  * **shell** (``repro.core.server``): feeds events from real channels
+    and executes effects against a compute engine.
+
+``snapshot()``/``restore()`` replace the old ad-hoc pickle blob with a
+structured, complete state capture (including per-client assignment
+tables and retry counters, which the old blob silently dropped).
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+
+from repro.core import policy as _policy
+from repro.core.hardness import Hardness, MinHardSet
+from repro.core.messages import Message, MsgType
+from repro.core.results import EventLog
+
+# task status values
+PENDING, ASSIGNED, DONE, TIMED_OUT, PRUNED, FAILED_POOL = (
+    "pending", "assigned", "done", "timed_out", "pruned", "failed_pool")
+
+
+@dataclass
+class ServerConfig:
+    min_group_size: int = 0
+    max_task_attempts: int = 3      # poison-task cap (beyond-paper)
+    use_backup: bool = False
+    max_clients: int = 4
+    workers_hint: int = 1              # informational; pools size themselves
+    health_update_limit: float = 10.0
+    instance_max_non_active_time: float = 30.0
+    create_backoff_init: float = 0.5
+    create_backoff_max: float = 30.0
+    health_interval: float = 1.0
+    out_dir: str | None = None
+    # policy layer (see repro.core.policy)
+    assign_policy: str = "hardness"    # "hardness" | "backfill"
+    assign_batch: int = 4              # batch size for "backfill"
+    scale_policy: str = "fixed"        # "fixed" | "demand"
+    idle_timeout_s: float = 5.0        # demand scale: idle-downscale cutoff
+    budget_cap: float | None = None    # stop scaling when cap is threatened
+    budget_reserve_s: float = 30.0     # projection horizon for the cap
+
+
+@dataclass
+class ClientInfo:
+    """Per-client record.  The core reads/writes everything except
+    ``endpoint``, which the shell stores here for effect execution and
+    which is deliberately excluded from snapshots."""
+
+    name: str
+    endpoint: object
+    last_health: float
+    srv_seq: int = 0                    # per-client logical send counter
+    last_client_seq: int = -1           # highest processed client msg seq
+    assigned: dict = field(default_factory=dict)   # tid -> task
+    capacity: int = 0                   # observed peak worker demand
+    last_active: float = 0.0            # last task-lifecycle activity
+
+
+# ---------------------------------------------------------------------------
+# typed events (inputs)
+# ---------------------------------------------------------------------------
+@dataclass
+class ClientMessage:
+    msg: Message
+    now: float
+
+
+@dataclass
+class ClientJoined:
+    name: str
+    now: float
+
+
+@dataclass
+class ClientLost:
+    name: str
+    now: float
+    reassign: bool = True
+
+
+@dataclass
+class Tick:
+    """Periodic decision point.  Everything the core may not observe
+    directly (engine pending counts, shell backoff state, metered cost)
+    arrives as event payload, so replaying ticks is deterministic.
+
+    ``pending_instances`` counts every booting instance (the paper's
+    fixed-fleet gate counts backups too); ``pending_clients`` counts
+    only client-kind instances (worker capacity, used by demand
+    scaling)."""
+
+    now: float
+    pending_instances: int = 0
+    pending_clients: int = 0
+    can_create: bool = True
+    accrued_cost: float = 0.0
+    burn_rate: float = 0.0
+    client_rate: float = 1.0
+
+
+# ---------------------------------------------------------------------------
+# typed effects (outputs)
+# ---------------------------------------------------------------------------
+@dataclass
+class Send:
+    client: str
+    mtype: MsgType
+    body: object = None
+    srv_seq: int = 0
+
+
+@dataclass
+class CreateInstance:
+    kind: str
+    name: str
+
+
+@dataclass
+class TerminateInstance:
+    name: str
+    reason: str = ""
+
+
+class SchedulerCore:
+    """Deterministic scheduling state machine (see module docstring)."""
+
+    def __init__(self, tasks, config: ServerConfig | None = None,
+                 events: EventLog | None = None):
+        self.config = config or ServerConfig()
+        order = sorted(range(len(tasks)),
+                       key=lambda i: tuple(tasks[i].hardness().values))
+        self.tasks = [tasks[i] for i in order]        # hardness-sorted
+        self.original_index = order                    # sorted pos -> orig pos
+        self.status = [PENDING] * len(tasks)
+        self.next_ptr = 0
+        self.tasks_from_failed: collections.deque[int] = collections.deque()
+        self.min_hard = MinHardSet()
+        self.results: dict[int, tuple] = {}
+        self.attempts: dict[int, int] = {}
+        self.task_spans: dict[int, tuple] = {}   # tid -> (client, t0, t1)
+        self._task_started: dict[int, tuple] = {}  # tid -> (client, t0)
+        self.clients: dict[str, ClientInfo] = {}
+        self.events = events or EventLog()
+        self.done = False
+        self._client_counter = 0
+        self._budget_hit = False
+        self._last_liveness = -1e18
+        self._build_policies()
+
+    def _build_policies(self):
+        self.assign_policy = _policy.make_assign_policy(self.config)
+        self.scale_policy = _policy.make_scale_policy(self.config)
+        self.budget_policy = _policy.make_budget_policy(self.config)
+
+    # ------------------------------------------------------------------
+    # event dispatch (replay entry point)
+    # ------------------------------------------------------------------
+    def handle(self, ev) -> list:
+        if isinstance(ev, ClientMessage):
+            return self.on_message(ev.msg, ev.now)
+        if isinstance(ev, ClientJoined):
+            self.client_joined(ev.name, ev.now)
+            return []
+        if isinstance(ev, ClientLost):
+            return self.drop_client(ev.name, ev.now, reassign=ev.reassign)
+        if isinstance(ev, Tick):
+            return self.on_tick(ev)
+        raise TypeError(f"unknown scheduler event: {ev!r}")
+
+    # ------------------------------------------------------------------
+    # assignment helpers (consumed by AssignPolicy implementations)
+    # ------------------------------------------------------------------
+    def take_failed(self):
+        """Pop the next re-assignable task from the failed pool, marking
+        disqualified entries PRUNED on the way.  None when exhausted."""
+        while self.tasks_from_failed:
+            tid = self.tasks_from_failed.popleft()
+            if self.status[tid] != FAILED_POOL:
+                continue
+            if self.min_hard.disqualifies(self.tasks[tid].hardness()):
+                self.status[tid] = PRUNED
+                continue
+            return tid, self.tasks[tid]
+        return None
+
+    def take_next(self):
+        """Advance the hardness-order pointer to the next grantable task,
+        marking disqualified entries PRUNED on the way."""
+        while self.next_ptr < len(self.tasks):
+            tid = self.next_ptr
+            self.next_ptr += 1
+            if self.status[tid] != PENDING:
+                continue
+            if self.min_hard.disqualifies(self.tasks[tid].hardness()):
+                self.status[tid] = PRUNED
+                continue
+            return tid, self.tasks[tid]
+        return None
+
+    def has_assignable(self) -> bool:
+        if any(self.status[t] == FAILED_POOL for t in self.tasks_from_failed):
+            return True
+        for tid in range(self.next_ptr, len(self.tasks)):
+            if self.status[tid] == PENDING \
+                    and not self.min_hard.disqualifies(
+                        self.tasks[tid].hardness()):
+                return True
+        return False
+
+    def count_assignable(self, bound: int) -> int:
+        """Number of currently grantable tasks, counted up to ``bound``
+        (early exit keeps scale-policy ticks O(bound)).  Pure query: does
+        not mark pruned tasks."""
+        c = 0
+        for tid in self.tasks_from_failed:
+            if self.status[tid] == FAILED_POOL \
+                    and not self.min_hard.disqualifies(
+                        self.tasks[tid].hardness()):
+                c += 1
+                if c >= bound:
+                    return c
+        for tid in range(self.next_ptr, len(self.tasks)):
+            if self.status[tid] == PENDING \
+                    and not self.min_hard.disqualifies(
+                        self.tasks[tid].hardness()):
+                c += 1
+                if c >= bound:
+                    return c
+        return c
+
+    # ------------------------------------------------------------------
+    # client lifecycle
+    # ------------------------------------------------------------------
+    def client_joined(self, name: str, now: float,
+                      endpoint=None) -> ClientInfo:
+        ci = ClientInfo(name, endpoint, now, last_active=now)
+        self.clients[name] = ci
+        self.events.ensure(name)
+        return ci
+
+    def register_client(self, name: str, srv_seq: int, last_client_seq: int,
+                        now: float, endpoint=None) -> ClientInfo:
+        """Backup-side registration from a NEW_CLIENT notification."""
+        ci = ClientInfo(name, endpoint, now, srv_seq=srv_seq,
+                        last_client_seq=last_client_seq, last_active=now)
+        self.clients[name] = ci
+        self.events.ensure(name)
+        return ci
+
+    def forget_client(self, name: str) -> None:
+        """Backup-side removal from a CLIENT_TERMINATED notification."""
+        self.clients.pop(name, None)
+
+    def drop_client(self, cname: str, now: float, reassign: bool,
+                    reason: str = "unhealthy") -> list:
+        """Remove a client; optionally requeue its assigned tasks.  Emits
+        the TerminateInstance effect for the shell to execute."""
+        ci = self.clients.pop(cname, None)
+        if ci is None:
+            return []
+        if reassign:
+            for tid in ci.assigned:
+                if self.status[tid] == ASSIGNED:
+                    self.status[tid] = FAILED_POOL
+                    self.tasks_from_failed.append(tid)
+        return [TerminateInstance(cname, reason)]
+
+    def alloc_instance_name(self, prefix: str) -> str:
+        name = f"{prefix}-{self._client_counter}"
+        self._client_counter += 1
+        return name
+
+    # ------------------------------------------------------------------
+    # message handling (paper §c)
+    # ------------------------------------------------------------------
+    def _send(self, ci: ClientInfo, mtype, body=None) -> Send:
+        eff = Send(ci.name, mtype, body, srv_seq=ci.srv_seq)
+        ci.srv_seq += 1
+        return eff
+
+    def control_broadcast(self, mtype, body=None) -> list:
+        """STOP/RESUME-style message to every known client (consumes one
+        srv_seq per client, exactly like any other server send)."""
+        return [self._send(ci, mtype, body) for ci in self.clients.values()]
+
+    def on_message(self, msg: Message, now: float) -> list:
+        cname = msg.sender
+        ci = self.clients.get(cname)
+        if ci is None:
+            return []
+        ci.last_client_seq = max(ci.last_client_seq, msg.seq)
+        t = msg.type
+        eff: list = []
+        if t == MsgType.HEALTH_UPDATE:
+            ci.last_health = now
+        elif t == MsgType.REQUEST_TASKS:
+            n = msg.body["n"]
+            ci.capacity = max(ci.capacity, n + len(ci.assigned))
+            granted = self.assign_policy.select(self, n)
+            if granted:
+                ci.last_active = now
+                for tid, task in granted:
+                    self.status[tid] = ASSIGNED
+                    ci.assigned[tid] = task
+                # echo the request size so a partial grant still settles the
+                # client's whole outstanding count (see Client._act)
+                eff.append(self._send(ci, MsgType.GRANT_TASKS,
+                                      {"tasks": granted, "requested": n}))
+            else:
+                eff.append(self._send(ci, MsgType.NO_FURTHER_TASKS))
+        elif t == MsgType.RESULT:
+            tid = msg.body["tid"]
+            ci.last_active = now
+            # Only ASSIGNED tasks may complete: a racy late result for a
+            # task already TIMED_OUT/PRUNED (domino effect) or already DONE
+            # (duplicate copy after takeover) must not corrupt the table.
+            started = self._task_started.pop(tid, None)
+            if self.status[tid] == ASSIGNED:
+                self.results[tid] = tuple(msg.body["result"])
+                self.status[tid] = DONE
+                t0 = started[1] if started is not None else now
+                self.task_spans[tid] = (cname, t0, now)
+            ci.assigned.pop(tid, None)
+        elif t == MsgType.REPORT_HARD_TASK:
+            tid = msg.body["tid"]
+            h = Hardness(tuple(msg.body["hardness"]))
+            self.status[tid] = TIMED_OUT
+            ci.assigned.pop(tid, None)
+            ci.last_active = now
+            self._task_started.pop(tid, None)
+            self.min_hard.add(h)
+            self._apply_domino(h)
+            for other in self.clients.values():
+                eff.append(self._send(other, MsgType.APPLY_DOMINO_EFFECT,
+                                      {"hardness": h.values}))
+        elif t == MsgType.LOG:
+            self.events.log(cname, now, "LOG", msg.body)
+            body = msg.body or {}
+            if body.get("event") == "started" and "tid" in body:
+                self._task_started[body["tid"]] = (cname, now)
+        elif t == MsgType.EXCEPTION:
+            self.events.log(cname, now, "EXCEPTION", msg.body)
+            tid = (msg.body or {}).get("tid")
+            if tid is not None and self.status[tid] == ASSIGNED:
+                ci.assigned.pop(tid, None)
+                ci.last_active = now
+                self._task_started.pop(tid, None)
+                self.attempts[tid] = self.attempts.get(tid, 1) + 1
+                if self.attempts[tid] > self.config.max_task_attempts:
+                    # poison task: stop retrying (would livelock otherwise)
+                    self.status[tid] = PRUNED
+                else:
+                    # worker crash: send the task back to the pool
+                    self.status[tid] = FAILED_POOL
+                    self.tasks_from_failed.append(tid)
+        elif t == MsgType.BYE:
+            self.events.log(cname, now, "LOG", {"event": "bye"})
+            eff += self.drop_client(cname, now, reassign=False, reason="bye")
+        return eff
+
+    def _apply_domino(self, h: Hardness):
+        """Mark all assigned/pending tasks dominated by h as pruned (their
+        clients are terminating them; results will never arrive)."""
+        for ci in self.clients.values():
+            for tid in list(ci.assigned):
+                if self.tasks[tid].hardness().geq(h):
+                    if self.status[tid] == ASSIGNED:
+                        self.status[tid] = PRUNED
+                    ci.assigned.pop(tid, None)
+                    self._task_started.pop(tid, None)
+
+    # ------------------------------------------------------------------
+    # periodic decisions (scaling, liveness, completion)
+    # ------------------------------------------------------------------
+    def on_tick(self, tick: Tick) -> list:
+        eff: list = []
+        # 1. fleet scaling (policy + budget), before liveness drops so the
+        #    max_clients count still includes unhealthy clients — matches
+        #    the paper loop's create-then-terminate order
+        decision = self.scale_policy.decide(self, tick)
+        if decision.create:
+            if self.budget_policy is not None \
+                    and not self.budget_policy.allow_create(self, tick):
+                if not self._budget_hit:
+                    self._budget_hit = True
+                    self.events.ensure("server")
+                    self.events.log(
+                        "server", tick.now, "LOG",
+                        {"event": "budget_cap",
+                         "cap": self.budget_policy.cap,
+                         "accrued": tick.accrued_cost})
+            else:
+                eff.append(CreateInstance(
+                    "client", self.alloc_instance_name("client")))
+        # 2. terminate unhealthy clients (+ requeue their tasks).  Health
+        #    state only changes at heartbeat granularity, so the O(clients)
+        #    sweep runs at health_interval cadence, not every tick — with
+        #    ready-set polling this keeps a quiet tick O(due work)
+        if tick.now - self._last_liveness >= self.config.health_interval:
+            self._last_liveness = tick.now
+            limit = self.config.health_update_limit
+            for cname, ci in list(self.clients.items()):
+                if tick.now - ci.last_health > limit:
+                    self.events.log(cname, tick.now, "LOG",
+                                    {"event": "unhealthy"})
+                    eff += self.drop_client(cname, tick.now, reassign=True,
+                                            reason="unhealthy")
+        # 3. proactive idle downscale (policy may return names of clients
+        #    with no assigned work; re-check so nothing is ever stranded)
+        for cname in decision.terminate:
+            ci = self.clients.get(cname)
+            if ci is not None and not ci.assigned:
+                self.events.log(cname, tick.now, "LOG",
+                                {"event": "idle_downscale"})
+                eff += self.drop_client(cname, tick.now, reassign=False,
+                                        reason="idle")
+        # 4. completion
+        self._check_done()
+        return eff
+
+    def _check_done(self):
+        if self.done:
+            return
+        if any(s == ASSIGNED for s in self.status) or self.has_assignable():
+            return
+        # no assignable work, nothing in flight: sweep survivors
+        for tid, s in enumerate(self.status):
+            if s in (PENDING, FAILED_POOL):
+                self.status[tid] = PRUNED
+        self.done = True
+
+    # ------------------------------------------------------------------
+    # structured snapshot/restore (complete state; replay-equivalent)
+    # ------------------------------------------------------------------
+    def snapshot(self) -> dict:
+        return {
+            "config": self.config,
+            "tasks": self.tasks,
+            "original_index": list(self.original_index),
+            "status": list(self.status),
+            "next_ptr": self.next_ptr,
+            "tasks_from_failed": list(self.tasks_from_failed),
+            "min_hard": self.min_hard.snapshot(),
+            "results": dict(self.results),
+            "attempts": dict(self.attempts),
+            "task_spans": dict(self.task_spans),
+            "task_started": dict(self._task_started),
+            "clients": {
+                c: {"srv_seq": ci.srv_seq,
+                    "last_client_seq": ci.last_client_seq,
+                    "assigned": sorted(ci.assigned),
+                    "last_health": ci.last_health,
+                    "capacity": ci.capacity,
+                    "last_active": ci.last_active}
+                for c, ci in self.clients.items()},
+            "events": self.events.snapshot(),
+            "done": self.done,
+            "client_counter": self._client_counter,
+            "budget_hit": self._budget_hit,
+            "last_liveness": self._last_liveness,
+        }
+
+    @classmethod
+    def restore(cls, snap: dict) -> "SchedulerCore":
+        core = cls.__new__(cls)
+        core.config = snap["config"]
+        core.tasks = snap["tasks"]
+        core.original_index = list(snap["original_index"])
+        core.status = list(snap["status"])
+        core.next_ptr = snap["next_ptr"]
+        core.tasks_from_failed = collections.deque(snap["tasks_from_failed"])
+        core.min_hard = MinHardSet()
+        core.min_hard.restore(snap["min_hard"])
+        core.results = dict(snap["results"])
+        core.attempts = dict(snap["attempts"])
+        core.task_spans = dict(snap["task_spans"])
+        core._task_started = dict(snap["task_started"])
+        core.clients = {}
+        for cname, st in snap["clients"].items():
+            core.clients[cname] = ClientInfo(
+                cname, None, st["last_health"], srv_seq=st["srv_seq"],
+                last_client_seq=st["last_client_seq"],
+                assigned={tid: core.tasks[tid] for tid in st["assigned"]},
+                capacity=st["capacity"], last_active=st["last_active"])
+        core.events = EventLog()
+        core.events.restore(snap["events"])
+        core.done = snap["done"]
+        core._client_counter = snap["client_counter"]
+        core._budget_hit = snap["budget_hit"]
+        core._last_liveness = snap["last_liveness"]
+        core._build_policies()
+        return core

@@ -1,12 +1,21 @@
-"""The primary (and backup) server — the paper's core loop.
+"""The primary (and backup) server — a thin shell around SchedulerCore.
 
-Task bookkeeping follows the paper exactly:
-  * ``tasks``            — sorted non-decreasing hardness (lexicographic
-                           order on the hardness tuple is a linear extension
-                           of the componentwise partial order),
-  * ``tasks_from_failed``— indices assigned to a failed client, re-assigned
-                           with priority,
-  * ``min_hard``         — Pareto-minimal antichain of timed-out hardnesses.
+The scheduling brain lives in ``repro.core.scheduler`` (pure, typed
+events in / typed effects out) with swappable policies in
+``repro.core.policy``.  This module is the transport/engine shell:
+
+  * the **primary** polls real channels, feeds each client message and a
+    periodic ``Tick`` into the core, and executes the emitted effects
+    (sends, instance creation with exponential backoff, terminations),
+    plus the engine-facing plumbing the core never sees: handshakes,
+    backup creation (freeze -> snapshot -> create), pending-instance
+    reaping and peer heartbeats;
+  * the **backup** replays the primary's FORWARDed copies into its own
+    restored core (mirroring replies on the backup channels), buffers
+    the clients' direct copies, and takes over on primary silence —
+    takeover is "replay the same event stream into the same core";
+  * the ``CostMeter`` is synced from the engine's billing records and
+    surfaces as cost columns in the results table.
 
 run-loop actions (paper §"The primary server" b):
   1. health update to the backup,
@@ -15,50 +24,23 @@ run-loop actions (paper §"The primary server" b):
   4. instance creation (backup precedence; exponential backoff),
   5. terminate unhealthy instances (+ reassign their tasks),
   6. output results when everything is done.
-
-The same class runs as the backup server: it consumes the primary's
-FORWARDed copies (popping the clients' direct copies), mirrors the
-primary's replies on the backup channels, and takes over on primary
-silence (SWAP_QUEUES + dangling-instance cleanup).
 """
 from __future__ import annotations
 
 import pickle
-from dataclasses import dataclass, field
 
-from repro.core.hardness import Hardness, MinHardSet
 from repro.core.messages import Message, MsgType
-from repro.core.results import EventLog, ResultsTable
+from repro.core.policy import CostMeter
+from repro.core.results import ResultsTable
+from repro.core.scheduler import (ASSIGNED, DONE, FAILED_POOL, PENDING,
+                                  PRUNED, TIMED_OUT, ClientInfo,
+                                  CreateInstance, SchedulerCore, Send,
+                                  ServerConfig, TerminateInstance, Tick)
 
-
-@dataclass
-class ServerConfig:
-    min_group_size: int = 0
-    max_task_attempts: int = 3      # poison-task cap (beyond-paper)
-    use_backup: bool = False
-    max_clients: int = 4
-    workers_hint: int = 1              # informational; pools size themselves
-    health_update_limit: float = 10.0
-    instance_max_non_active_time: float = 30.0
-    create_backoff_init: float = 0.5
-    create_backoff_max: float = 30.0
-    health_interval: float = 1.0
-    out_dir: str | None = None
-
-
-@dataclass
-class ClientInfo:
-    name: str
-    endpoint: object
-    last_health: float
-    srv_seq: int = 0                    # per-client logical send counter
-    last_client_seq: int = -1           # highest processed client msg seq
-    assigned: dict = field(default_factory=dict)   # tid -> task
-
-
-# task status values
-PENDING, ASSIGNED, DONE, TIMED_OUT, PRUNED, FAILED_POOL = (
-    "pending", "assigned", "done", "timed_out", "pruned", "failed_pool")
+__all__ = [
+    "Server", "ServerConfig", "ClientInfo",
+    "PENDING", "ASSIGNED", "DONE", "TIMED_OUT", "PRUNED", "FAILED_POOL",
+]
 
 
 class Server:
@@ -68,21 +50,11 @@ class Server:
         self.config = config or ServerConfig()
         self.name = name
         self.role = role
+        self.core = SchedulerCore(tasks, self.config)
+        self._init_shell_state()
 
-        order = sorted(range(len(tasks)),
-                       key=lambda i: tuple(tasks[i].hardness().values))
-        self.tasks = [tasks[i] for i in order]        # hardness-sorted
-        self.original_index = order                    # sorted pos -> orig pos
-        self.status = [PENDING] * len(tasks)
-        self.next_ptr = 0
-        self.tasks_from_failed: list[int] = []
-        self.min_hard = MinHardSet()
-        self.results: dict[int, tuple] = {}
-        self.attempts: dict[int, int] = {}
-
-        self.clients: dict[str, ClientInfo] = {}
-        self.events = EventLog()
-        self.done = False
+    def _init_shell_state(self):
+        self.cost_meter = CostMeter()
         self.final_results: ResultsTable | None = None
 
         # backup coordination
@@ -94,12 +66,17 @@ class Server:
         self.primary_endpoint = None         # backup's channel to primary
         self.primary_last_health = None
         self._direct_buffer: dict[str, list[Message]] = {}
+        self._deferred_handshakes: list[Message] = []
+
+        # ready-set polling: recv-wire -> client name (and the reverse),
+        # so engines that track deliveries let us drain only endpoints
+        # with something due instead of sweeping every client
+        self._wire_owner: dict = {}
+        self._owned_wires: dict[str, object] = {}
 
         # instance creation backoff
         self._next_create_at = 0.0
         self._backoff = self.config.create_backoff_init
-        self._client_counter = 0
-        self._instance_birth: dict[str, float] = {}
         # server<->server heartbeats go out at health_interval cadence (the
         # same cadence clients use), not once per loop iteration — under the
         # event-driven simulator a per-step heartbeat would wake the peer,
@@ -107,141 +84,147 @@ class Server:
         self._last_peer_health_sent = -1e18
 
     # ------------------------------------------------------------------
+    # core-state delegation (the core owns all scheduling state)
+    # ------------------------------------------------------------------
+    @property
+    def clients(self) -> dict[str, ClientInfo]:
+        return self.core.clients
+
+    @property
+    def tasks(self):
+        return self.core.tasks
+
+    @property
+    def original_index(self):
+        return self.core.original_index
+
+    @property
+    def status(self):
+        return self.core.status
+
+    @property
+    def next_ptr(self):
+        return self.core.next_ptr
+
+    @property
+    def tasks_from_failed(self):
+        return self.core.tasks_from_failed
+
+    @property
+    def min_hard(self):
+        return self.core.min_hard
+
+    @property
+    def results(self):
+        return self.core.results
+
+    @property
+    def attempts(self):
+        return self.core.attempts
+
+    @property
+    def events(self):
+        return self.core.events
+
+    @property
+    def done(self) -> bool:
+        return self.core.done
+
+    # ------------------------------------------------------------------
     def now(self) -> float:
         return self.engine.now()
 
-    def send_to_client(self, ci: ClientInfo, mtype, body=None):
-        msg = Message(mtype, self.name, body, srv_seq=ci.srv_seq)
-        ci.srv_seq += 1
-        # the endpoint can be gone already: a backup may learn of a client
-        # whose instance the primary terminated while the notification was
-        # in flight — the send just goes nowhere, like a deleted VM's queue
-        if ci.endpoint is not None:
-            ci.endpoint.send(msg)
+    # ------------------------------------------------------------------
+    # ready-set endpoint bookkeeping
+    # ------------------------------------------------------------------
+    def _own_endpoint(self, ci: ClientInfo):
+        wire = getattr(ci.endpoint, "recv_wire", None)
+        if wire is not None:
+            self._wire_owner[wire] = ci.name
+            self._owned_wires[ci.name] = wire
+
+    def _disown_endpoint(self, cname: str):
+        wire = self._owned_wires.pop(cname, None)
+        if wire is not None:
+            self._wire_owner.pop(wire, None)
+
+    def _mark_drained(self, ep):
+        """Re-arm or clear an endpoint's ready mark after an
+        unconditional drain (server<->server wires are polled directly,
+        outside the ready-set path)."""
+        drained = getattr(self.engine, "endpoint_drained", None)
+        if drained is not None and ep is not None:
+            drained(ep)
+
+    def _drain_ready(self, now: float, drain_one):
+        """Drain client endpoints with pending deliveries.  ``drain_one``
+        is called with each ClientInfo whose endpoint must be polled; with
+        an engine that tracks deliveries only the due endpoints are
+        visited, otherwise every client is swept."""
+        ready = getattr(self.engine, "ready_wires", None)
+        drained = getattr(self.engine, "endpoint_drained", None)
+        if ready is not None:
+            for wire in ready(now):
+                cname = self._wire_owner.get(wire)
+                if cname is None:
+                    continue           # another server's wire
+                ci = self.core.clients.get(cname)
+                if ci is None or ci.endpoint is None:
+                    continue
+                drain_one(ci)
+                if drained is not None:
+                    drained(ci.endpoint)
+        else:
+            for cname in list(self.core.clients):
+                ci = self.core.clients.get(cname)
+                if ci is None or ci.endpoint is None:
+                    continue
+                drain_one(ci)
 
     # ------------------------------------------------------------------
-    # task assignment (paper §a)
+    # effect execution
     # ------------------------------------------------------------------
-    def _next_tasks(self, n: int) -> list[tuple[int, object]]:
-        out = []
-        while self.tasks_from_failed and len(out) < n:
-            tid = self.tasks_from_failed.pop(0)
-            if self.status[tid] != FAILED_POOL:
-                continue
-            if self.min_hard.disqualifies(self.tasks[tid].hardness()):
-                self.status[tid] = PRUNED
-                continue
-            out.append((tid, self.tasks[tid]))
-        while self.next_ptr < len(self.tasks) and len(out) < n:
-            tid = self.next_ptr
-            self.next_ptr += 1
-            if self.status[tid] != PENDING:
-                continue
-            if self.min_hard.disqualifies(self.tasks[tid].hardness()):
-                self.status[tid] = PRUNED
-                continue
-            out.append((tid, self.tasks[tid]))
-        return out
+    def _apply(self, eff, now: float):
+        if isinstance(eff, Send):
+            ci = self.core.clients.get(eff.client)
+            # the endpoint can be gone already: a backup may learn of a
+            # client whose instance the primary terminated while the
+            # notification was in flight — the send just goes nowhere,
+            # like a deleted VM's queue
+            if ci is not None and ci.endpoint is not None:
+                ci.endpoint.send(Message(eff.mtype, self.name, eff.body,
+                                         srv_seq=eff.srv_seq))
+        elif isinstance(eff, TerminateInstance):
+            self._disown_endpoint(eff.name)
+            if self.role == "primary":
+                self.engine.terminate_instance(eff.name)
+                if self.backup_endpoint is not None:
+                    self.backup_endpoint.send(
+                        Message(MsgType.CLIENT_TERMINATED, self.name,
+                                {"name": eff.name}))
+        elif isinstance(eff, CreateInstance):
+            self._execute_create(eff, now)
 
-    def _has_assignable(self) -> bool:
-        if any(self.status[t] == FAILED_POOL for t in self.tasks_from_failed):
-            return True
-        for tid in range(self.next_ptr, len(self.tasks)):
-            if self.status[tid] == PENDING \
-                    and not self.min_hard.disqualifies(
-                        self.tasks[tid].hardness()):
-                return True
-        return False
+    def _execute_create(self, eff: CreateInstance, now: float):
+        from repro.core.engine import RateLimited
 
-    # ------------------------------------------------------------------
-    # message handling (paper §c)
-    # ------------------------------------------------------------------
+        try:
+            self.engine.create_instance(eff.kind, eff.name)
+            self._backoff = self.config.create_backoff_init
+            self._next_create_at = now + self._backoff
+        except RateLimited:
+            self._backoff = min(self._backoff * 2,
+                                self.config.create_backoff_max)
+            self._next_create_at = now + self._backoff
+
     def process_client_message(self, msg: Message):
-        cname = msg.sender
-        ci = self.clients.get(cname)
-        if ci is None:
-            return
-        ci.last_client_seq = max(ci.last_client_seq, msg.seq)
-        t = msg.type
-        if t == MsgType.HEALTH_UPDATE:
-            ci.last_health = self.now()
-        elif t == MsgType.REQUEST_TASKS:
-            granted = self._next_tasks(msg.body["n"])
-            if granted:
-                for tid, task in granted:
-                    self.status[tid] = ASSIGNED
-                    ci.assigned[tid] = task
-                # echo the request size so a partial grant still settles the
-                # client's whole outstanding count (see Client._act)
-                self.send_to_client(ci, MsgType.GRANT_TASKS,
-                                    {"tasks": granted,
-                                     "requested": msg.body["n"]})
-            else:
-                self.send_to_client(ci, MsgType.NO_FURTHER_TASKS)
-        elif t == MsgType.RESULT:
-            tid = msg.body["tid"]
-            # Only ASSIGNED tasks may complete: a racy late result for a
-            # task already TIMED_OUT/PRUNED (domino effect) or already DONE
-            # (duplicate copy after takeover) must not corrupt the table.
-            if self.status[tid] == ASSIGNED:
-                self.results[tid] = tuple(msg.body["result"])
-                self.status[tid] = DONE
-            ci.assigned.pop(tid, None)
-        elif t == MsgType.REPORT_HARD_TASK:
-            tid = msg.body["tid"]
-            h = Hardness(tuple(msg.body["hardness"]))
-            self.status[tid] = TIMED_OUT
-            ci.assigned.pop(tid, None)
-            self.min_hard.add(h)
-            self._apply_domino(h)
-            for other in self.clients.values():
-                self.send_to_client(other, MsgType.APPLY_DOMINO_EFFECT,
-                                    {"hardness": h.values})
-        elif t == MsgType.LOG:
-            self.events.log(cname, self.now(), "LOG", msg.body)
-        elif t == MsgType.EXCEPTION:
-            self.events.log(cname, self.now(), "EXCEPTION", msg.body)
-            tid = (msg.body or {}).get("tid")
-            if tid is not None and self.status[tid] == ASSIGNED:
-                ci.assigned.pop(tid, None)
-                self.attempts[tid] = self.attempts.get(tid, 1) + 1
-                if self.attempts[tid] > self.config.max_task_attempts:
-                    # poison task: stop retrying (would livelock otherwise)
-                    self.status[tid] = PRUNED
-                else:
-                    # worker crash: send the task back to the pool
-                    self.status[tid] = FAILED_POOL
-                    self.tasks_from_failed.append(tid)
-        elif t == MsgType.BYE:
-            self.events.log(cname, self.now(), "LOG", {"event": "bye"})
-            self._drop_client(cname, terminate_instance=True)
+        now = self.now()
+        for eff in self.core.on_message(msg, now):
+            self._apply(eff, now)
 
-    def _apply_domino(self, h: Hardness):
-        """Mark all assigned/pending tasks dominated by h as pruned (their
-        clients are terminating them; results will never arrive)."""
-        for ci in self.clients.values():
-            for tid in list(ci.assigned):
-                if self.tasks[tid].hardness().geq(h):
-                    if self.status[tid] == ASSIGNED:
-                        self.status[tid] = PRUNED
-                    ci.assigned.pop(tid, None)
-
-    def _drop_client(self, cname: str, terminate_instance: bool,
-                     reassign: bool = False):
-        ci = self.clients.pop(cname, None)
-        if ci is None:
-            return
-        if reassign:
-            for tid in ci.assigned:
-                if self.status[tid] == ASSIGNED:
-                    self.status[tid] = FAILED_POOL
-                    self.tasks_from_failed.append(tid)
-        if terminate_instance and self.role == "primary":
-            self.engine.terminate_instance(cname)
-        if self.role == "primary" and self.backup_endpoint is not None:
-            self.backup_endpoint.send(
-                Message(MsgType.CLIENT_TERMINATED, self.name,
-                        {"name": cname}))
+    def _broadcast(self, mtype, now: float):
+        for eff in self.core.control_broadcast(mtype):
+            self._apply(eff, now)
 
     # ------------------------------------------------------------------
     # the run loop (paper §b)
@@ -274,35 +257,72 @@ class Server:
                     break
                 if m.type == MsgType.HEALTH_UPDATE:
                     self.backup_last_health = now
+            self._mark_drained(self.backup_endpoint)
 
         # 3. client messages (deferred entirely while frozen so the backup
-        #    snapshot + forwarded stream is a consistent replay)
+        #    snapshot + forwarded stream is a consistent replay); engines
+        #    with delivery tracking let us visit only endpoints with a
+        #    delivery due (ready-set polling) instead of sweeping all
         if not self.frozen:
-            for cname in list(self.clients):
-                ci = self.clients.get(cname)
-                if ci is None or ci.endpoint is None:
-                    continue
-                while True:
-                    msg = ci.endpoint.poll()
-                    if msg is None:
-                        break
-                    if self.backup_endpoint is not None:
-                        self.backup_endpoint.send(
-                            Message(MsgType.FORWARD, self.name,
-                                    {"msg": msg}))
-                    self.process_client_message(msg)
+            self._drain_ready(now, self._drain_primary_endpoint)
 
-        # 4. instance creation
-        self._maybe_create_instance(now)
+        # 4. instance creation (backup takes precedence) + policy tick
+        can_create = now >= self._next_create_at
+        if can_create and self.config.use_backup \
+                and self.backup_endpoint is None and not self.backup_pending:
+            self._create_backup(now)
+            can_create = False
+        for eff in self.core.on_tick(self._make_tick(now, can_create)):
+            self._apply(eff, now)
 
-        # 5. terminate unhealthy instances
-        self._terminate_unhealthy(now)
+        # 5. reap pending instances that never handshook; backup health
+        self._reap_pending(now)
+        self._check_backup_health(now)
 
         # 6. results
-        self._check_done()
+        if self.core.done and self.final_results is None:
+            self.final_results = self.output_results()
+            if self.config.out_dir:
+                self.final_results.write(self.config.out_dir)
+                self.core.events.write(self.config.out_dir)
+
+    def _drain_primary_endpoint(self, ci: ClientInfo):
+        while True:
+            msg = ci.endpoint.poll()
+            if msg is None:
+                break
+            if self.backup_endpoint is not None:
+                self.backup_endpoint.send(
+                    Message(MsgType.FORWARD, self.name, {"msg": msg}))
+            self.process_client_message(msg)
+
+    def _make_tick(self, now: float, can_create: bool) -> Tick:
+        pending_map = getattr(self.engine, "pending", None) or {}
+        pending = len(pending_map)
+        pending_clients = sum(
+            1 for p in pending_map.values()
+            if getattr(p, "kind", "client") == "client")
+        accrued = burn = 0.0
+        client_rate = 1.0
+        if self.config.budget_cap is not None:
+            self._sync_meter()
+            accrued = self.cost_meter.accrued(now)
+            burn = self.cost_meter.burn_rate(now)
+            rate_fn = getattr(self.engine, "cost_rate", None)
+            if rate_fn is not None:
+                client_rate = rate_fn("client")
+        return Tick(now, pending_instances=pending,
+                    pending_clients=pending_clients, can_create=can_create,
+                    accrued_cost=accrued, burn_rate=burn,
+                    client_rate=client_rate)
+
+    def _sync_meter(self):
+        records = getattr(self.engine, "billing_records", None)
+        if records is not None:
+            self.cost_meter.sync(records())
 
     def _handle_handshakes(self):
-        todo = getattr(self, "_deferred_handshakes", [])
+        todo = self._deferred_handshakes
         self._deferred_handshakes = []
         while True:
             msg = self.engine.handshake_recv.poll()
@@ -321,9 +341,9 @@ class Server:
             if pending is None:
                 continue
             if kind == "client":
-                ci = ClientInfo(name, pending.primary_side, self.now())
-                self.clients[name] = ci
-                self.events.ensure(name)
+                ci = self.core.client_joined(name, self.now(),
+                                             endpoint=pending.primary_side)
+                self._own_endpoint(ci)
                 if self.backup_endpoint is not None:
                     self.backup_endpoint.send(
                         Message(MsgType.NEW_CLIENT, self.name,
@@ -335,43 +355,26 @@ class Server:
                 self.backup_last_health = self.now()
                 self.backup_pending = False
                 # register existing clients with the new backup
-                for cname, ci in self.clients.items():
+                for cname, ci in self.core.clients.items():
                     self.backup_endpoint.send(
                         Message(MsgType.NEW_CLIENT, self.name,
                                 {"name": cname, "srv_seq": ci.srv_seq,
                                  "last_client_seq": ci.last_client_seq}))
                 # unfreeze: clients may resume
-                for ci in self.clients.values():
-                    self.send_to_client(ci, MsgType.RESUME)
+                self._broadcast(MsgType.RESUME, self.now())
                 self.frozen = False
 
-    def _maybe_create_instance(self, now):
-        if now < self._next_create_at:
-            return
+    def _create_backup(self, now: float):
+        """Freeze the world, snapshot, create the backup (paper §a)."""
         from repro.core.engine import RateLimited
 
         try:
-            if self.config.use_backup and self.backup_endpoint is None \
-                    and not self.backup_pending:
-                # freeze the world, snapshot, create the backup (paper §a)
-                self.frozen = True
-                for ci in self.clients.values():
-                    self.send_to_client(ci, MsgType.STOP)
-                snapshot = self.serialize_state()
-                name = f"backup-{self._client_counter}"
-                self._client_counter += 1
-                self.engine.create_instance("backup", name, payload=snapshot)
-                self.backup_pending = True
-                self._instance_birth[name] = now
-            elif self._has_assignable() \
-                    and len(self.clients) + len(self.engine.pending) \
-                    < self.config.max_clients:
-                name = f"client-{self._client_counter}"
-                self._client_counter += 1
-                self.engine.create_instance("client", name)
-                self._instance_birth[name] = now
-            else:
-                return
+            self.frozen = True
+            self._broadcast(MsgType.STOP, now)
+            snapshot = self.serialize_state()
+            name = self.core.alloc_instance_name("backup")
+            self.engine.create_instance("backup", name, payload=snapshot)
+            self.backup_pending = True
             self._backoff = self.config.create_backoff_init
             self._next_create_at = now + self._backoff
         except RateLimited:
@@ -380,19 +383,10 @@ class Server:
             self._next_create_at = now + self._backoff
             if self.frozen and self.backup_pending is False:
                 # failed to even create the backup: unfreeze and retry later
-                for ci in self.clients.values():
-                    self.send_to_client(ci, MsgType.RESUME)
+                self._broadcast(MsgType.RESUME, now)
                 self.frozen = False
 
-    def _terminate_unhealthy(self, now):
-        limit = self.config.health_update_limit
-        for cname, ci in list(self.clients.items()):
-            if now - ci.last_health > limit:
-                self.events.log(cname, now, "LOG", {"event": "unhealthy"})
-                self.engine.terminate_instance(cname)
-                self._drop_client(cname, terminate_instance=False,
-                                  reassign=True)
-        # pending instances that never handshook
+    def _reap_pending(self, now: float):
         max_na = self.config.instance_max_non_active_time
         for name, pending in list(self.engine.pending.items()):
             if now - pending.created_at > max_na:
@@ -401,10 +395,11 @@ class Server:
                 if pending.kind == "backup":
                     self.backup_pending = False
                     if self.frozen:
-                        for ci in self.clients.values():
-                            self.send_to_client(ci, MsgType.RESUME)
+                        self._broadcast(MsgType.RESUME, now)
                         self.frozen = False
-        # backup health
+
+    def _check_backup_health(self, now: float):
+        limit = self.config.health_update_limit
         if self.backup_endpoint is not None \
                 and self.backup_last_health is not None \
                 and now - self.backup_last_health > limit:
@@ -413,85 +408,42 @@ class Server:
             self.backup_name = None
             self.backup_last_health = None
 
-    def _check_done(self):
-        if self.done:
-            return
-        active = any(s in (ASSIGNED,) for s in self.status)
-        if active or self._has_assignable():
-            return
-        # no assignable work, nothing in flight: sweep survivors
-        for tid, s in enumerate(self.status):
-            if s in (PENDING, FAILED_POOL):
-                self.status[tid] = PRUNED
-        self.done = True
-        self.final_results = self.output_results()
-        if self.config.out_dir:
-            self.final_results.write(self.config.out_dir)
-            self.events.write(self.config.out_dir)
-
     # ------------------------------------------------------------------
     def output_results(self) -> ResultsTable:
+        now = self.now()
+        self._sync_meter()
+        task_costs = {
+            tid: (t1 - t0) * self.cost_meter.rate_of(cname)
+            for tid, (cname, t0, t1) in self.core.task_spans.items()}
         return ResultsTable.build(
-            tasks=self.tasks,
-            original_index=self.original_index,
-            status=self.status,
-            results=self.results,
+            tasks=self.core.tasks,
+            original_index=self.core.original_index,
+            status=self.core.status,
+            results=self.core.results,
             min_group_size=self.config.min_group_size,
+            task_costs=task_costs,
+            cost=self.cost_meter.summary(now),
         )
 
     # ------------------------------------------------------------------
     # backup-server machinery (paper §fault tolerance)
     # ------------------------------------------------------------------
     def serialize_state(self) -> bytes:
-        return pickle.dumps({
-            "tasks": self.tasks,
-            "original_index": self.original_index,
-            "status": self.status,
-            "next_ptr": self.next_ptr,
-            "tasks_from_failed": self.tasks_from_failed,
-            "min_hard": self.min_hard.snapshot(),
-            "results": self.results,
-            "clients": {c: (ci.srv_seq, ci.last_client_seq)
-                        for c, ci in self.clients.items()},
-            "config": self.config,
-            "events": self.events.snapshot(),
-        })
+        return pickle.dumps({"core": self.core.snapshot()})
 
     @classmethod
     def from_snapshot(cls, blob: bytes, engine, name: str = "backup"):
         st = pickle.loads(blob)
         srv = cls.__new__(cls)
         srv.engine = engine
-        srv.config = st["config"]
+        srv.core = SchedulerCore.restore(st["core"])
+        # avoid instance-name collisions with anything the primary created
+        # after the snapshot was taken
+        srv.core._client_counter = max(srv.core._client_counter, 10_000)
+        srv.config = srv.core.config
         srv.name = name
         srv.role = "backup"
-        srv.tasks = st["tasks"]
-        srv.original_index = st["original_index"]
-        srv.status = st["status"]
-        srv.next_ptr = st["next_ptr"]
-        srv.tasks_from_failed = list(st["tasks_from_failed"])
-        srv.min_hard = MinHardSet()
-        srv.min_hard.restore(st["min_hard"])
-        srv.results = dict(st["results"])
-        srv.clients = {}
-        srv._snapshot_clients = st["clients"]
-        srv.events = EventLog()
-        srv.events.restore(st["events"])
-        srv.done = False
-        srv.final_results = None
-        srv.backup_endpoint = None
-        srv.backup_name = None
-        srv.backup_last_health = None
-        srv.backup_pending = False
-        srv.frozen = False
-        srv.primary_endpoint = None
-        srv.primary_last_health = None
-        srv._direct_buffer = {}
-        srv._next_create_at = 0.0
-        srv._backoff = srv.config.create_backoff_init
-        srv._client_counter = 10_000   # avoid name collisions with primary
-        srv._instance_birth = {}
-        srv._last_peer_health_sent = -1e18
+        srv._init_shell_state()
         return srv
 
     def backup_bootstrap(self, primary_endpoint, handshake_send):
@@ -499,11 +451,10 @@ class Server:
         backup channels, handshake."""
         self.primary_endpoint = primary_endpoint
         self.primary_last_health = self.now()
-        for cname, (srv_seq, last_seq) in self._snapshot_clients.items():
-            ep = self.engine.backup_endpoint(cname)
-            ci = ClientInfo(cname, ep, self.now(), srv_seq=srv_seq,
-                            last_client_seq=last_seq)
-            self.clients[cname] = ci
+        for cname, ci in self.core.clients.items():
+            ci.endpoint = self.engine.backup_endpoint(cname)
+            ci.last_health = self.now()     # liveness clock starts here
+            self._own_endpoint(ci)
             self._direct_buffer.setdefault(cname, [])
         handshake_send.send(Message(MsgType.HANDSHAKE, self.name,
                                     body={"kind": "backup"}))
@@ -528,28 +479,29 @@ class Server:
                 self.process_client_message(inner)
             elif m.type == MsgType.NEW_CLIENT:
                 b = m.body
-                ep = self.engine.backup_endpoint(b["name"])
-                self.clients[b["name"]] = ClientInfo(
-                    b["name"], ep, now, srv_seq=b["srv_seq"],
-                    last_client_seq=b["last_client_seq"])
+                ci = self.core.register_client(
+                    b["name"], b["srv_seq"], b["last_client_seq"], now,
+                    endpoint=self.engine.backup_endpoint(b["name"]))
+                self._own_endpoint(ci)
                 self._direct_buffer.setdefault(b["name"], [])
-                self.events.ensure(b["name"])
             elif m.type == MsgType.CLIENT_TERMINATED:
-                self.clients.pop(m.body["name"], None)
+                self.core.forget_client(m.body["name"])
+                self._disown_endpoint(m.body["name"])
                 self._direct_buffer.pop(m.body["name"], None)
-        # direct copies from clients -> buffer
-        for cname, ci in list(self.clients.items()):
-            if ci.endpoint is None:
-                continue   # instance deleted while its registration flew
+        self._mark_drained(self.primary_endpoint)
+        # direct copies from clients -> buffer (a client's endpoint can be
+        # None when its instance was deleted while the registration flew)
+        def buffer_direct(ci: ClientInfo):
             while True:
                 m = ci.endpoint.poll()
                 if m is None:
                     break
                 if m.seq <= ci.last_client_seq:
                     continue  # processed by primary before the snapshot
-                self._direct_buffer.setdefault(cname, []).append(m)
+                self._direct_buffer.setdefault(ci.name, []).append(m)
                 if m.type == MsgType.HEALTH_UPDATE:
                     ci.last_health = now
+        self._drain_ready(now, buffer_direct)
         # primary failure -> take over
         if now - self.primary_last_health > self.config.health_update_limit:
             self._take_over()
@@ -571,7 +523,7 @@ class Server:
         # SWAP_QUEUES — a later backup must not attach to the endpoint this
         # server now polls, or it would steal client messages
         rotate = getattr(self.engine, "rotate_client_channels", None)
-        for cname, ci in self.clients.items():
+        for cname in self.core.clients:
             ep = self.engine.primary_endpoints(cname)
             new_backup = rotate(cname) if rotate is not None else None
             if ep is not None:
@@ -579,17 +531,24 @@ class Server:
                                 {"new_backup": new_backup}))
         # process buffered direct messages in order
         for cname in list(self._direct_buffer):
-            ci = self.clients.get(cname)
-            if ci is None:
+            if cname not in self.core.clients:
                 continue
             for m in sorted(self._direct_buffer.pop(cname, []),
                             key=lambda m: m.seq):
                 self.process_client_message(m)
-        # dangling-instance cleanup: delete instances with no client object
-        known = set(self.clients) | {self.name}
+        # dangling-instance cleanup: delete instances with no client object.
+        # Backup servers are recognized by the engine's kind registry, not
+        # by their name (a client named "backup…" must still be reaped).
+        known = set(self.core.clients) | {self.name}
+        kind_of = getattr(self.engine, "instance_kind", None)
         for iname in self.engine.list_instances():
-            if iname not in known and not iname.startswith("backup"):
-                self.engine.terminate_instance(iname)
+            if iname in known:
+                continue
+            kind = kind_of(iname) if kind_of is not None else None
+            if kind == "backup" or \
+                    (kind is None and iname.startswith("backup")):
+                continue   # name-prefix fallback for registry-less engines
+            self.engine.terminate_instance(iname)
         self.backup_endpoint = None
         self.backup_name = None
         self.backup_pending = False

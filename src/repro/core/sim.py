@@ -37,7 +37,6 @@ from dataclasses import dataclass, field
 from repro.core import transport
 from repro.core.client import Client
 from repro.core.engine import AbstractEngine, PendingInstance, RateLimited
-from repro.core.messages import Message, MsgType
 from repro.core.server import Server, ServerConfig
 from repro.core.task import AbstractTask
 from repro.core.workerpool import SimWorkerPool
@@ -122,6 +121,7 @@ class InstanceType:
     cost_per_instance_second: float | None = None
     client_workers: int | None = None
     preemptible: bool = True            # spot waves only hit preemptible kinds
+    min_billing_s: float | None = None  # minimum billed commitment
 
 
 @dataclass
@@ -132,11 +132,15 @@ class SimParams:
     latency: float = 0.01              # message latency
     dt: float = 0.05                   # step size (mode="fixed" only)
     cost_per_instance_second: float = 1.0
+    min_billing_s: float = 0.0         # per-instance minimum billed seconds
+    #   (clouds bill a minimum commitment per started instance; makes
+    #   over-provisioning visible to the cost account)
     mode: str = "events"               # "events" | "fixed" (legacy polling)
     latency_jitter: float = 0.0        # U[0, jitter) extra delay per message
     seed: int = 0                      # RNG seed (jitter + spot waves)
     wake_quantum: float = 0.05         # server wake coalescing granularity
     client_health_interval: float = 1.0   # heartbeat cadence of sim clients
+    ready_poll: bool = True            # servers skip endpoints w/o deliveries
     instance_types: dict = field(default_factory=dict)  # kind -> InstanceType
 
 
@@ -154,7 +158,12 @@ class SimEngine(AbstractEngine):
         self._instances: dict[str, float] = {}  # name -> created_at (billing)
         self._stopped_at: dict[str, float] = {}
         self._rates: dict[str, float] = {}      # name -> $/instance-second
-        self._kinds: dict[str, str] = {}        # name -> instance kind
+        self._kinds: dict[str, str] = {}        # name -> kind (persistent
+        #   registry: entries survive termination so instance_kind and
+        #   billing_records stay answerable for closed instances)
+        # ready-set polling: server-side wire -> earliest pending delivery
+        # (servers skip draining endpoints with nothing due)
+        self._wire_ready: dict = {}
         self._boot_eps: dict[str, tuple] = {}   # name -> client-side endpoints
         self._to_create: list = []              # (t, kind, name, payload)
         self._last_create = -1e18
@@ -172,6 +181,10 @@ class SimEngine(AbstractEngine):
         # without a backup server the two-copy wires are never drained, so
         # minting them only doubles every client send
         self.backup_links = True
+        if not self.params.ready_poll:
+            # shadow the methods: servers fall back to draining everything
+            self.ready_wires = None
+            self.endpoint_drained = None
 
     # ------------------------------------------------------------------
     # event plumbing
@@ -186,10 +199,49 @@ class SimEngine(AbstractEngine):
         return cb
 
     def _link(self, recv_a=None, recv_b=None):
-        return transport.sim_link(
+        a, b = transport.sim_link(
             self.clock, self.params.latency,
             jitter=self.params.latency_jitter, rng=self.rng,
             notify_a=self._notify(recv_a), notify_b=self._notify(recv_b))
+        if recv_a == SERVERS:
+            self._track_server_wire(a)
+        if recv_b == SERVERS:
+            self._track_server_wire(b)
+        return a, b
+
+    # ------------------------------------------------------------------
+    # ready-set endpoint polling (ROADMAP item): every delivery into a
+    # server-side wire records the earliest readable time, so the primary
+    # (and backup) skip draining client endpoints with nothing due
+    # ------------------------------------------------------------------
+    def _track_server_wire(self, ep):
+        wire = ep.recv_wire
+        base = wire.on_deliver
+
+        def cb(t, _w=wire, _base=base):
+            cur = self._wire_ready.get(_w)
+            if cur is None or t < cur:
+                self._wire_ready[_w] = t
+            if _base is not None:
+                _base(t)
+        wire.on_deliver = cb
+
+    def ready_wires(self, now: float) -> list:
+        """Server-side wires with a delivery due at or before ``now``.
+        Servers map these back to clients through their own ownership
+        table and drain only those endpoints — O(due wires) instead of
+        O(clients) per step."""
+        return [w for w, t in self._wire_ready.items() if t <= now]
+
+    def endpoint_drained(self, ep) -> None:
+        wire = getattr(ep, "recv_wire", None)
+        if wire is None:
+            return
+        nxt = wire.next_delivery()
+        if nxt is None:
+            self._wire_ready.pop(wire, None)
+        else:
+            self._wire_ready[wire] = nxt   # future deliveries still queued
 
     # ------------------------------------------------------------------
     # heterogeneous instance types
@@ -247,13 +299,19 @@ class SimEngine(AbstractEngine):
         self.alive.pop(name, None)
         self.pending.pop(name, None)
         self._boot_eps.pop(name, None)
-        self._primary_eps.pop(name, None)
-        self._backup_eps.pop(name, None)
-        self._kinds.pop(name, None)
+        # _kinds is deliberately retained: the registry keeps answering
+        # instance_kind / billing_records for terminated instances
+        for ep in (self._primary_eps.pop(name, None),
+                   self._backup_eps.pop(name, None)):
+            if ep is not None:
+                self._wire_ready.pop(getattr(ep, "recv_wire", None), None)
         if name in self._instances:
             rate = self._rates.pop(name, self.params.cost_per_instance_second)
-            self.cost_log.append(
-                (name, self._instances.pop(name), self.now(), rate))
+            start = self._instances.pop(name)
+            min_bill = self._type_attr(self._kinds.get(name, "client"),
+                                       "min_billing_s")
+            end = max(self.now(), start + min_bill)
+            self.cost_log.append((name, start, end, rate))
 
     def list_instances(self):
         return list(self._instances)
@@ -272,6 +330,11 @@ class SimEngine(AbstractEngine):
         (shipped to the client inside SWAP_QUEUES).  Without this, a
         post-takeover backup would attach to the same endpoint the acting
         primary polls and steal its client messages."""
+        old_p = self._primary_eps.get(name)
+        if old_p is not None:
+            # the dead primary's wire is abandoned: purge its ready mark
+            # so ready_wires() stops returning it forever
+            self._wire_ready.pop(getattr(old_p, "recv_wire", None), None)
         old_b = self._backup_eps.get(name)
         if old_b is not None:
             self._primary_eps[name] = old_b
@@ -322,14 +385,38 @@ class SimEngine(AbstractEngine):
                 self.nodes[name] = client
                 self.loop.wake(name, now)
 
+    def _min_billed_end(self, name: str, start: float, now: float) -> float:
+        min_bill = self._type_attr(self._kinds.get(name, "client"),
+                                   "min_billing_s")
+        return max(now, start + min_bill)
+
     def total_cost(self) -> float:
         now = self.now()
         base = self.params.cost_per_instance_second
         cost = sum((end - start) * rate
                    for _, start, end, rate in self.cost_log)
-        cost += sum((now - start) * self._rates.get(name, base)
+        cost += sum((self._min_billed_end(name, start, now) - start)
+                    * self._rates.get(name, base)
                     for name, start in self._instances.items())
         return cost
+
+    def cost_rate(self, kind: str) -> float:
+        return self._type_attr(kind, "cost_per_instance_second")
+
+    def billing_records(self):
+        """Exact virtual-clock billing intervals for the CostMeter.  Open
+        instances carry their minimum-billing commitment as ``min_end``
+        so budget projections see spend that is locked in but not yet
+        elapsed (closed intervals were already floored at termination)."""
+        base = self.params.cost_per_instance_second
+        recs = [(name, self._kinds.get(name, "client"), rate, start, end)
+                for name, start, end, rate in self.cost_log]
+        for name, start in self._instances.items():
+            kind = self._kinds.get(name, "client")
+            min_bill = self._type_attr(kind, "min_billing_s")
+            recs.append((name, kind, self._rates.get(name, base), start,
+                         None, start + min_bill))
+        return recs
 
 
 # ---------------------------------------------------------------------------
@@ -348,6 +435,8 @@ class SimCluster:
         self.server = Server(tasks, self.engine, config)
         self.engine.backup_links = self.server.config.use_backup
         self.engine._instances["primary"] = 0.0
+        self.engine._kinds["primary"] = "server"
+        self.engine._rates["primary"] = self.engine.cost_rate("server")
         self.engine.alive["primary"] = True
         self._script: list = []   # (t, fn) sorted
         self._primary_killed = False

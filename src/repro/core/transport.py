@@ -101,11 +101,20 @@ class SimWire:
             return self._q.popleft()[1]
         return None
 
+    def next_delivery(self) -> float | None:
+        """Delivery time of the oldest queued message (None when empty) —
+        lets the engine's ready-set tracking skip drained wires."""
+        return self._q[0][0] if self._q else None
+
 
 class SimEndpoint(Endpoint):
     def __init__(self, send_wire: SimWire, recv_wire: SimWire):
         self._send = send_wire
         self._recv = recv_wire
+
+    @property
+    def recv_wire(self) -> SimWire:
+        return self._recv
 
     def send(self, msg):
         self._send.put(msg)

@@ -54,6 +54,11 @@ def main(argv=None):
     ap.add_argument("--out", default="dryrun_results")
     ap.add_argument("--variant", nargs="*", default=[])
     ap.add_argument("--max-clients", type=int, default=1)
+    ap.add_argument("--scale", choices=["fixed", "demand"], default="fixed",
+                    help="fleet-scaling policy (see repro.core.policy)")
+    ap.add_argument("--budget-cap", type=float, default=None,
+                    help="stop creating instances when the projected spend "
+                         "(wall-clock-proxy instance-seconds) nears the cap")
     args = ap.parse_args(argv)
 
     meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
@@ -71,12 +76,18 @@ def main(argv=None):
         health_update_limit=60.0,
         instance_max_non_active_time=120.0,
         out_dir=args.out + "/expocloud",
+        workers_hint=1,
+        scale_policy=args.scale,
+        budget_cap=args.budget_cap,
     )
     server = Server(tasks, engine, config)
     t0 = time.time()
     table = server.run(poll_sleep=0.2)
     print(f"[sweep] done in {time.time()-t0:.0f}s")
     print(table.to_csv())
+    if table.cost is not None:
+        print(f"[sweep] cost: {table.cost['total']:.0f} instance-seconds "
+              f"(wall-clock proxy, {table.cost['instances']} instances)")
     engine.shutdown()
 
 
