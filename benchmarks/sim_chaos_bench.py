@@ -1,0 +1,198 @@
+"""Chaos benchmark: fault-injection scenarios for the discrete-event sim.
+
+Runs the same fault-tolerant parameter-sweep workload under four network
+conditions and measures completeness (solved tasks — the paper's "no
+results are lost" claim under *partial* failures, not just node kills)
+and the cost/makespan overhead each failure mode induces:
+
+  * ``clean``     — no partitions (baseline),
+  * ``oneway``    — one-way primary->client link loss for a window
+    (grants die silently; the client keeps heartbeating: regrant +
+    request-retry must recover every stranded assignment),
+  * ``pb_freeze`` — the primary<->backup link partitions across the
+    freeze/backup-creation window and heals later (the backup must
+    neither take over (grace) nor drift (gap-detected resync)),
+  * ``flapping``  — every 2 s each client link goes dark for 1 s with
+    probability 0.2, random direction (seeded).
+
+Also validates the trace record/replay mode end to end: the clean run is
+recorded (with latency jitter enabled) and replayed via
+``SimParams(trace=...)`` with different jitter/seed parameters — the
+replay must reproduce the recorded run's results table row-for-row.
+
+Results land in BENCH_chaos.json at the repo root.
+
+Usage:
+    PYTHONPATH=src python benchmarks/sim_chaos_bench.py [--smoke] [--out F]
+
+``--smoke`` asserts zero lost tasks in every scenario + replay identity
+(CI tripwire).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import random
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.core.server import ServerConfig          # noqa: E402
+from repro.core.sim import SimCluster, SimParams, SimTask   # noqa: E402
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _workload(n: int, dur_lo: float = 1.5, dur_hi: float = 4.0):
+    return [SimTask((i, 0), ("n", "id"), (i,),
+                    dur_lo + (dur_hi - dur_lo) * ((i * 7) % n) / n,
+                    None, (i,))
+            for i in range(1, n + 1)]
+
+
+def _cluster(n_tasks: int, n_clients: int, params: SimParams) -> SimCluster:
+    return SimCluster(
+        _workload(n_tasks),
+        ServerConfig(max_clients=n_clients, use_backup=True,
+                     health_update_limit=4.0, partition_grace_s=8.0),
+        params)
+
+
+def _script_scenario(cl: SimCluster, scenario: str):
+    if scenario == "clean":
+        return
+    if scenario == "oneway":
+        # grants to the first client die for 9 s mid-run ("client-1":
+        # with use_backup the backup instance takes name counter 0)
+        cl.partition("primary", "client-1", direction="a2b",
+                     at=4.0, until=13.0)
+    elif scenario == "pb_freeze":
+        # the pb link is dark across the freeze/backup-creation window
+        # (backup creation starts immediately; creation_delay ~2 s)
+        cl.partition("primary", "backup", at=1.0, until=9.0)
+    elif scenario == "flapping":
+        rng = random.Random(1234)
+
+        def flap(c):
+            for node in c.clients():
+                if not c.engine.alive.get(node.name, False):
+                    continue
+                if rng.random() < 0.2:
+                    direction = rng.choice(["a2b", "b2a", "both"])
+                    c.engine.partition("primary", node.name, direction,
+                                       until=c.clock.now() + 1.0)
+            if c.clock.now() < 30.0:
+                c.at(c.clock.now() + 2.0, flap)
+
+        cl.at(2.0, flap)
+    else:
+        raise ValueError(scenario)
+
+
+def run_scenario(scenario: str, n_tasks: int, n_clients: int) -> dict:
+    params = SimParams(client_workers=2, seed=0)
+    cl = _cluster(n_tasks, n_clients, params)
+    _script_scenario(cl, scenario)
+    t0 = time.perf_counter()
+    srv = cl.run(until=1e6, max_steps=20_000_000)
+    wall = time.perf_counter() - t0
+    solved = sum(1 for _, r, _ in srv.final_results.rows if r is not None)
+    return {
+        "scenario": scenario,
+        "tasks": len(srv.final_results.rows),
+        "solved": solved,
+        "results_exactly_once": len(srv.results) == solved,
+        "sim_makespan_s": round(cl.clock.now(), 3),
+        "wall_s": round(wall, 4),
+        "events": cl.loop.processed,
+        "cost": round(cl.engine.total_cost(), 1),
+        "acting_primary": cl.acting_primary().name,
+        "rows": srv.final_results.rows,
+    }
+
+
+def run_trace_replay(n_tasks: int, n_clients: int) -> dict:
+    """Record a jittery run (with a spot wave), replay it via
+    SimParams(trace=...), assert row-identical tables."""
+    rec = _cluster(n_tasks, n_clients,
+                   SimParams(client_workers=2, seed=3, latency_jitter=0.04,
+                             record_trace=True))
+    rec.spot_wave(6.0, 0.3)
+    srv = rec.run(until=1e6, max_steps=20_000_000)
+    trace = rec.trace()
+    rep = _cluster(n_tasks, n_clients,
+                   SimParams(client_workers=2, seed=999, latency_jitter=0.0,
+                             trace=trace))
+    srv2 = rep.run(until=1e6, max_steps=20_000_000)
+    identical = srv2.final_results.rows == srv.final_results.rows
+    return {
+        "recorded_makespan_s": round(rec.clock.now(), 3),
+        "replayed_makespan_s": round(rep.clock.now(), 3),
+        "recorded_message_delays": sum(
+            len(v) for v in trace.message_delays.values()),
+        "recorded_preemptions": len(trace.preemptions),
+        "rows_identical": identical,
+    }
+
+
+SCENARIOS = ("clean", "oneway", "pb_freeze", "flapping")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="assert zero lost tasks + replay identity (CI)")
+    ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_chaos.json"))
+    args = ap.parse_args(argv)
+
+    n_tasks, n_clients = (36, 3) if args.smoke else (96, 6)
+
+    runs = []
+    clean = None
+    for scenario in SCENARIOS:
+        r = run_scenario(scenario, n_tasks, n_clients)
+        rows = r.pop("rows")
+        if scenario == "clean":
+            clean, clean_rows = r, rows
+            r["makespan_overhead"] = r["cost_overhead"] = 1.0
+        else:
+            r["makespan_overhead"] = round(
+                r["sim_makespan_s"] / clean["sim_makespan_s"], 3)
+            r["cost_overhead"] = round(r["cost"] / clean["cost"], 3)
+            # chaos may reorder completions but never lose or invent rows
+            assert sorted(map(str, rows)) == sorted(map(str, clean_rows)), \
+                f"{scenario}: results differ from the clean run"
+        runs.append(r)
+        print(f"{scenario:9s}: solved {r['solved']}/{r['tasks']}  "
+              f"makespan={r['sim_makespan_s']:7.1f}s "
+              f"(x{r['makespan_overhead']:.2f})  "
+              f"cost={r['cost']:8.1f} (x{r['cost_overhead']:.2f})  "
+              f"primary={r['acting_primary']}")
+
+    replay = run_trace_replay(n_tasks, n_clients)
+    print(f"trace replay: recorded {replay['recorded_makespan_s']}s "
+          f"({replay['recorded_message_delays']} message delays, "
+          f"{replay['recorded_preemptions']} preemptions) -> "
+          f"identical rows: {replay['rows_identical']}")
+
+    out = {"bench": "sim_chaos", "n_tasks": n_tasks,
+           "n_clients": n_clients, "scenarios": runs,
+           "trace_replay": replay}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out}")
+
+    if args.smoke:
+        for r in runs:
+            assert r["solved"] == r["tasks"], \
+                f"{r['scenario']}: lost {r['tasks'] - r['solved']} tasks"
+            assert r["results_exactly_once"], r["scenario"]
+        assert replay["rows_identical"], "trace replay diverged"
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -22,7 +22,8 @@ from repro.core.workerpool import WorkerEvent
 
 class Client:
     def __init__(self, name, primary_channel, backup_channel, pool, clock,
-                 handshake=None, health_interval: float = 1.0):
+                 handshake=None, health_interval: float = 1.0,
+                 request_retry: float = 8.0):
         self.name = name
         self.primary = primary_channel
         self.backup = backup_channel
@@ -30,6 +31,11 @@ class Client:
         self.clock = clock
         self.health_interval = health_interval
         self._last_health = -1e18
+        # outstanding task requests are presumed lost (one-way link loss
+        # drops GRANTs silently) after this long and re-issued; grants
+        # normally settle within ~2 RTT so healthy runs never retry
+        self.request_retry = request_retry
+        self._last_request = -1e18
 
         self.tasks: dict[int, object] = {}     # tid -> task (granted)
         self.queue: collections.deque[int] = collections.deque()  # granted,
@@ -39,20 +45,34 @@ class Client:
         self.stopped = False
         self.finished = False
 
-        # two-copy dedup state
+        # two-copy dedup state (srv_seq: per-client sends; ctrl_seq:
+        # control broadcasts — separate counter spaces, separate sets)
         self._processed_srv_seqs: set[int] = set()
+        self._processed_ctrl_seqs: set[int] = set()
         self._backup_buffer: list[Message] = []
+
+        # at-least-once delivery for state-bearing reports: RESULT /
+        # REPORT_HARD_TASK / EXCEPTION stay in the outbox (same Message,
+        # same seq — the server's handling is idempotent) and are re-sent
+        # until the server ACKs them, so a partition that swallows a
+        # RESULT cannot strand its task in ASSIGNED forever
+        self._outbox: dict[int, list] = {}     # msg.seq -> [Message, t_sent]
 
         if handshake is not None:
             handshake.send(Message(MsgType.HANDSHAKE, self.name,
                                    body={"kind": "client"}))
 
     # ------------------------------------------------------------------
+    _NEEDS_ACK = (MsgType.RESULT, MsgType.REPORT_HARD_TASK,
+                  MsgType.EXCEPTION)
+
     def send_to_servers(self, mtype, body=None):
         msg = Message(mtype, self.name, body)
         self.primary.send(msg)
         if self.backup is not None:
             self.backup.send(msg)    # the copy (same seq) for the backup
+        if mtype in self._NEEDS_ACK:
+            self._outbox[msg.seq] = [msg, self.clock()]
 
     # ------------------------------------------------------------------
     def step(self) -> bool:
@@ -94,12 +114,26 @@ class Client:
                 self.send_to_servers(MsgType.LOG,
                                      {"event": "timeout", "tid": tid})
 
-        # 3. request tasks
+        # 2b. re-send unacknowledged reports (lost to a partition)
+        for seq, entry in list(self._outbox.items()):
+            msg, t_sent = entry
+            if now - t_sent > self.request_retry:
+                self.primary.send(msg)
+                if self.backup is not None:
+                    self.backup.send(msg)
+                entry[1] = now
+
+        # 3. request tasks (an unanswered request eventually retries —
+        #    its GRANT may have been lost to a partition)
         if not self.stopped and not self.no_further:
+            if self.outstanding > 0 \
+                    and now - self._last_request > self.request_retry:
+                self.outstanding = 0
             want = self.pool.idle() - self.outstanding - len(self.queue)
             if want > 0:
                 self.send_to_servers(MsgType.REQUEST_TASKS, {"n": want})
                 self.outstanding += want
+                self._last_request = now
 
         # 4. process messages
         while True:
@@ -121,9 +155,11 @@ class Client:
                 if tid in self.tasks:
                     self.pool.start(tid, self.tasks[tid])
 
-        # exit condition
+        # exit condition (pending un-ACKed reports hold the client alive:
+        # saying BYE before the server confirmed receipt loses results)
         if self.no_further and not self.queue and not self.tasks \
-                and not self.pool.running() and not self.finished:
+                and not self.pool.running() and not self._outbox \
+                and not self.finished:
             self.send_to_servers(MsgType.BYE)
             self.finished = True
         return self.finished
@@ -160,10 +196,20 @@ class Client:
             return
         if msg.srv_seq is not None and msg.srv_seq in self._processed_srv_seqs:
             return  # mirror of an already-processed primary message: pop
+        if msg.ctrl_seq is not None \
+                and msg.ctrl_seq in self._processed_ctrl_seqs:
+            return  # mirror of an already-processed control broadcast
         self._backup_buffer.append(msg)
 
     def _act(self, msg: Message):
-        if msg.srv_seq is not None:
+        if msg.ctrl_seq is not None:
+            if msg.ctrl_seq in self._processed_ctrl_seqs:
+                return
+            self._processed_ctrl_seqs.add(msg.ctrl_seq)
+            self._backup_buffer = [
+                m for m in self._backup_buffer
+                if m.ctrl_seq != msg.ctrl_seq]
+        elif msg.srv_seq is not None:
             if msg.srv_seq in self._processed_srv_seqs:
                 return
             self._processed_srv_seqs.add(msg.srv_seq)
@@ -172,7 +218,9 @@ class Client:
                 m for m in self._backup_buffer
                 if m.srv_seq != msg.srv_seq]
         t = msg.type
-        if t == MsgType.GRANT_TASKS:
+        if t == MsgType.ACK:
+            self._outbox.pop(msg.body["seq"], None)
+        elif t == MsgType.GRANT_TASKS:
             granted = msg.body["tasks"]   # list[(tid, task)]
             # The server echoes how many tasks the request asked for; a
             # partial grant (fewer tasks than requested) must still settle
@@ -182,6 +230,8 @@ class Client:
             requested = msg.body.get("requested", len(granted))
             self.outstanding = max(0, self.outstanding - requested)
             for tid, task in granted:
+                if tid in self.tasks:
+                    continue   # re-granted while the original survived
                 self.tasks[tid] = task
                 self.queue.append(tid)
             self.send_to_servers(
@@ -218,5 +268,9 @@ class Client:
                 self.primary = self.backup
             self.backup = (msg.body or {}).get("new_backup")
             buffered, self._backup_buffer = self._backup_buffer, []
-            for m in sorted(buffered, key=lambda m: (m.srv_seq or 0)):
+            # control broadcasts (srv_seq None) sort ahead of data sends;
+            # within each space the counters give the true order
+            for m in sorted(buffered,
+                            key=lambda m: (0, m.ctrl_seq or 0)
+                            if m.srv_seq is None else (1, m.srv_seq)):
                 self._act(m)

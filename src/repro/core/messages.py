@@ -16,6 +16,7 @@ class MsgType(enum.Enum):
     EXCEPTION = "EXCEPTION"
     BYE = "BYE"
     # primary -> client
+    ACK = "ACK"                   # ack of a state-bearing client message
     GRANT_TASKS = "GRANT_TASKS"
     NO_FURTHER_TASKS = "NO_FURTHER_TASKS"
     APPLY_DOMINO_EFFECT = "APPLY_DOMINO_EFFECT"
@@ -26,6 +27,9 @@ class MsgType(enum.Enum):
     NEW_CLIENT = "NEW_CLIENT"
     CLIENT_TERMINATED = "CLIENT_TERMINATED"
     FORWARD = "FORWARD"           # copy of a client message, primary->backup
+    BROADCAST = "BROADCAST"       # control broadcast notice, primary->backup
+    RESYNC_REQUEST = "RESYNC_REQUEST"   # backup detected a replication gap
+    SYNC_STATE = "SYNC_STATE"     # fresh snapshot, primary->backup (resync)
     # instance -> server bootstrap
     HANDSHAKE = "HANDSHAKE"
 
@@ -42,6 +46,11 @@ class Message:
     # server->client messages carry a per-client logical counter so clients
     # can dedup the primary's message against the backup's mirror of it
     srv_seq: int | None = None
+    # control broadcasts (STOP/RESUME) instead carry a control-plane
+    # counter shared by all clients: one logical broadcast, one number —
+    # per-client srv_seq is never consumed, so the backup's mirrored
+    # srv_seq state cannot diverge from the primary's across broadcasts
+    ctrl_seq: int | None = None
 
     def key(self):
         """Dedup key for the two-copy delivery protocol (client->server

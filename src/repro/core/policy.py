@@ -163,6 +163,31 @@ class DemandScalePolicy(ScalePolicy):
 
 
 # ---------------------------------------------------------------------------
+# liveness (partition hardening)
+# ---------------------------------------------------------------------------
+@dataclass
+class LivenessPolicy:
+    """How long a silent client may live before it is declared dead.
+
+    Real cloud incidents are dominated by *partial* failures — one-way
+    link loss, asymmetric partitions, delayed-but-alive peers (Gent &
+    Kotthoff) — so a client whose link the transport reports as
+    partitioned (``ClientInfo.suspected_at`` set via the core's
+    ``LinkLost`` event) gets ``partition_grace_s`` extra allowance: if
+    the link heals within the grace window the client's tasks are never
+    double-assigned and no takeover/termination churn happens.  A truly
+    dead client still dies at ``limit`` + grace."""
+
+    limit: float
+    partition_grace_s: float = 0.0
+
+    def allowance(self, ci) -> float:
+        if ci.suspected_at is not None:
+            return self.limit + self.partition_grace_s
+        return self.limit
+
+
+# ---------------------------------------------------------------------------
 # budget
 # ---------------------------------------------------------------------------
 @dataclass
@@ -275,3 +300,9 @@ def make_budget_policy(config):
         return None
     return BudgetPolicy(cap=cap,
                         reserve_s=getattr(config, "budget_reserve_s", 30.0))
+
+
+def make_liveness_policy(config) -> LivenessPolicy:
+    return LivenessPolicy(
+        limit=getattr(config, "health_update_limit", 10.0),
+        partition_grace_s=getattr(config, "partition_grace_s", 0.0))

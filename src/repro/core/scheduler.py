@@ -57,6 +57,13 @@ class ServerConfig:
     idle_timeout_s: float = 5.0        # demand scale: idle-downscale cutoff
     budget_cap: float | None = None    # stop scaling when cap is threatened
     budget_reserve_s: float = 30.0     # projection horizon for the cap
+    # partition hardening (see repro.core.policy.LivenessPolicy):
+    partition_grace_s: float = 0.0     # extra liveness allowance while a
+    #   client's link is reported partitioned (LinkLost) — a partitioned-
+    #   but-alive client is not declared dead until limit + grace
+    regrant_timeout_s: float = 6.0     # re-send an unacknowledged GRANT on
+    #   the client's next request after this long (recovers grants lost to
+    #   one-way server->client link loss; acked within ~2 RTT normally)
 
 
 @dataclass
@@ -73,6 +80,9 @@ class ClientInfo:
     assigned: dict = field(default_factory=dict)   # tid -> task
     capacity: int = 0                   # observed peak worker demand
     last_active: float = 0.0            # last task-lifecycle activity
+    suspected_at: float | None = None   # LinkLost time (None = link fine)
+    unacked: dict = field(default_factory=dict)    # tid -> grant time, not
+    #   yet acknowledged (client's "granted"/"started" LOG or RESULT)
 
 
 # ---------------------------------------------------------------------------
@@ -95,6 +105,24 @@ class ClientLost:
     name: str
     now: float
     reassign: bool = True
+
+
+@dataclass
+class LinkLost:
+    """The transport reports the link to a client as (partially) down —
+    the client may be partitioned-but-alive, so liveness gets
+    ``partition_grace_s`` more allowance before declaring it dead."""
+
+    name: str
+    now: float
+
+
+@dataclass
+class LinkHealed:
+    """The client's link recovered; normal liveness allowance resumes."""
+
+    name: str
+    now: float
 
 
 @dataclass
@@ -125,7 +153,8 @@ class Send:
     client: str
     mtype: MsgType
     body: object = None
-    srv_seq: int = 0
+    srv_seq: int | None = None          # per-client counter (normal sends)
+    ctrl_seq: int | None = None         # control-plane counter (broadcasts)
 
 
 @dataclass
@@ -164,12 +193,14 @@ class SchedulerCore:
         self._client_counter = 0
         self._budget_hit = False
         self._last_liveness = -1e18
+        self.ctrl_seq = 0           # control-plane broadcast counter
         self._build_policies()
 
     def _build_policies(self):
         self.assign_policy = _policy.make_assign_policy(self.config)
         self.scale_policy = _policy.make_scale_policy(self.config)
         self.budget_policy = _policy.make_budget_policy(self.config)
+        self.liveness_policy = _policy.make_liveness_policy(self.config)
 
     # ------------------------------------------------------------------
     # event dispatch (replay entry point)
@@ -182,6 +213,10 @@ class SchedulerCore:
             return []
         if isinstance(ev, ClientLost):
             return self.drop_client(ev.name, ev.now, reassign=ev.reassign)
+        if isinstance(ev, LinkLost):
+            return self.on_link_lost(ev.name, ev.now)
+        if isinstance(ev, LinkHealed):
+            return self.on_link_healed(ev.name, ev.now)
         if isinstance(ev, Tick):
             return self.on_tick(ev)
         raise TypeError(f"unknown scheduler event: {ev!r}")
@@ -270,6 +305,27 @@ class SchedulerCore:
         """Backup-side removal from a CLIENT_TERMINATED notification."""
         self.clients.pop(name, None)
 
+    # ------------------------------------------------------------------
+    # link-state events (partition hardening)
+    # ------------------------------------------------------------------
+    def on_link_lost(self, cname: str, now: float) -> list:
+        ci = self.clients.get(cname)
+        if ci is not None and ci.suspected_at is None:
+            ci.suspected_at = now
+            self.events.log(cname, now, "LOG", {"event": "link_lost"})
+        return []
+
+    def on_link_healed(self, cname: str, now: float) -> list:
+        ci = self.clients.get(cname)
+        if ci is not None and ci.suspected_at is not None:
+            ci.suspected_at = None
+            # silence during the partition is explained by the partition:
+            # restart the health window instead of letting the allowance
+            # collapse below the accumulated silence the moment it heals
+            ci.last_health = max(ci.last_health, now)
+            self.events.log(cname, now, "LOG", {"event": "link_healed"})
+        return []
+
     def drop_client(self, cname: str, now: float, reassign: bool,
                     reason: str = "unhealthy") -> list:
         """Remove a client; optionally requeue its assigned tasks.  Emits
@@ -298,9 +354,16 @@ class SchedulerCore:
         return eff
 
     def control_broadcast(self, mtype, body=None) -> list:
-        """STOP/RESUME-style message to every known client (consumes one
-        srv_seq per client, exactly like any other server send)."""
-        return [self._send(ci, mtype, body) for ci in self.clients.values()]
+        """STOP/RESUME-style message to every known client.  One logical
+        broadcast consumes one *control-plane* number shared by all
+        recipients — per-client srv_seq is untouched, so a backup that
+        missed the broadcast still agrees with the primary on every
+        client's srv_seq (the backup mirrors the consumption by replaying
+        the same broadcast from the primary's BROADCAST notice)."""
+        seq = self.ctrl_seq
+        self.ctrl_seq += 1
+        return [Send(ci.name, mtype, body, ctrl_seq=seq)
+                for ci in self.clients.values()]
 
     def on_message(self, msg: Message, now: float) -> list:
         cname = msg.sender
@@ -315,21 +378,38 @@ class SchedulerCore:
         elif t == MsgType.REQUEST_TASKS:
             n = msg.body["n"]
             ci.capacity = max(ci.capacity, n + len(ci.assigned))
+            # Re-grant assignments whose GRANT was never acknowledged and
+            # has aged past the regrant timeout: a one-way server->client
+            # link loss swallows grants silently, leaving tasks ASSIGNED
+            # to a client that never received them — without the re-grant
+            # those tasks are stranded forever (the client keeps
+            # heartbeating, so liveness never requeues them).
+            regrant = [(tid, ci.assigned[tid]) for tid, t0 in ci.unacked.items()
+                       if now - t0 > self.config.regrant_timeout_s
+                       and tid in ci.assigned]
             granted = self.assign_policy.select(self, n)
-            if granted:
+            if granted or regrant:
                 ci.last_active = now
                 for tid, task in granted:
                     self.status[tid] = ASSIGNED
                     ci.assigned[tid] = task
+                for tid, _ in regrant + granted:
+                    ci.unacked[tid] = now
                 # echo the request size so a partial grant still settles the
                 # client's whole outstanding count (see Client._act)
                 eff.append(self._send(ci, MsgType.GRANT_TASKS,
-                                      {"tasks": granted, "requested": n}))
+                                      {"tasks": regrant + granted,
+                                       "requested": n}))
             else:
                 eff.append(self._send(ci, MsgType.NO_FURTHER_TASKS))
         elif t == MsgType.RESULT:
+            # state-bearing reports are ACKed (by client message seq) so
+            # the client can drop them from its at-least-once outbox —
+            # processing below is idempotent, so duplicates just re-ACK
+            eff.append(self._send(ci, MsgType.ACK, {"seq": msg.seq}))
             tid = msg.body["tid"]
             ci.last_active = now
+            ci.unacked.pop(tid, None)
             # Only ASSIGNED tasks may complete: a racy late result for a
             # task already TIMED_OUT/PRUNED (domino effect) or already DONE
             # (duplicate copy after takeover) must not corrupt the table.
@@ -341,10 +421,12 @@ class SchedulerCore:
                 self.task_spans[tid] = (cname, t0, now)
             ci.assigned.pop(tid, None)
         elif t == MsgType.REPORT_HARD_TASK:
+            eff.append(self._send(ci, MsgType.ACK, {"seq": msg.seq}))
             tid = msg.body["tid"]
             h = Hardness(tuple(msg.body["hardness"]))
             self.status[tid] = TIMED_OUT
             ci.assigned.pop(tid, None)
+            ci.unacked.pop(tid, None)
             ci.last_active = now
             self._task_started.pop(tid, None)
             self.min_hard.add(h)
@@ -357,11 +439,18 @@ class SchedulerCore:
             body = msg.body or {}
             if body.get("event") == "started" and "tid" in body:
                 self._task_started[body["tid"]] = (cname, now)
+                ci.unacked.pop(body["tid"], None)
+            elif body.get("event") == "granted":
+                # the client acknowledged receipt of these grants
+                for tid in body.get("tids", ()):
+                    ci.unacked.pop(tid, None)
         elif t == MsgType.EXCEPTION:
+            eff.append(self._send(ci, MsgType.ACK, {"seq": msg.seq}))
             self.events.log(cname, now, "EXCEPTION", msg.body)
             tid = (msg.body or {}).get("tid")
             if tid is not None and self.status[tid] == ASSIGNED:
                 ci.assigned.pop(tid, None)
+                ci.unacked.pop(tid, None)
                 ci.last_active = now
                 self._task_started.pop(tid, None)
                 self.attempts[tid] = self.attempts.get(tid, 1) + 1
@@ -374,7 +463,10 @@ class SchedulerCore:
                     self.tasks_from_failed.append(tid)
         elif t == MsgType.BYE:
             self.events.log(cname, now, "LOG", {"event": "bye"})
-            eff += self.drop_client(cname, now, reassign=False, reason="bye")
+            # reassign=True is a no-op in the healthy flow (a client only
+            # says BYE with an empty table) but saves any assignment a
+            # desynced takeover still believes this client holds
+            eff += self.drop_client(cname, now, reassign=True, reason="bye")
         return eff
 
     def _apply_domino(self, h: Hardness):
@@ -386,6 +478,7 @@ class SchedulerCore:
                     if self.status[tid] == ASSIGNED:
                         self.status[tid] = PRUNED
                     ci.assigned.pop(tid, None)
+                    ci.unacked.pop(tid, None)
                     self._task_started.pop(tid, None)
 
     # ------------------------------------------------------------------
@@ -417,9 +510,13 @@ class SchedulerCore:
         #    ready-set polling this keeps a quiet tick O(due work)
         if tick.now - self._last_liveness >= self.config.health_interval:
             self._last_liveness = tick.now
-            limit = self.config.health_update_limit
             for cname, ci in list(self.clients.items()):
-                if tick.now - ci.last_health > limit:
+                # a client whose link is reported partitioned (LinkLost)
+                # gets partition_grace_s on top of the health limit — a
+                # partitioned-but-alive client must not be declared dead
+                # (and its tasks double-assigned) for a healable link
+                if tick.now - ci.last_health > \
+                        self.liveness_policy.allowance(ci):
                     self.events.log(cname, tick.now, "LOG",
                                     {"event": "unhealthy"})
                     eff += self.drop_client(cname, tick.now, reassign=True,
@@ -470,13 +567,16 @@ class SchedulerCore:
                     "assigned": sorted(ci.assigned),
                     "last_health": ci.last_health,
                     "capacity": ci.capacity,
-                    "last_active": ci.last_active}
+                    "last_active": ci.last_active,
+                    "suspected_at": ci.suspected_at,
+                    "unacked": dict(ci.unacked)}
                 for c, ci in self.clients.items()},
             "events": self.events.snapshot(),
             "done": self.done,
             "client_counter": self._client_counter,
             "budget_hit": self._budget_hit,
             "last_liveness": self._last_liveness,
+            "ctrl_seq": self.ctrl_seq,
         }
 
     @classmethod
@@ -500,12 +600,15 @@ class SchedulerCore:
                 cname, None, st["last_health"], srv_seq=st["srv_seq"],
                 last_client_seq=st["last_client_seq"],
                 assigned={tid: core.tasks[tid] for tid in st["assigned"]},
-                capacity=st["capacity"], last_active=st["last_active"])
+                capacity=st["capacity"], last_active=st["last_active"],
+                suspected_at=st.get("suspected_at"),
+                unacked=dict(st.get("unacked", {})))
         core.events = EventLog()
         core.events.restore(snap["events"])
         core.done = snap["done"]
         core._client_counter = snap["client_counter"]
         core._budget_hit = snap["budget_hit"]
         core._last_liveness = snap["last_liveness"]
+        core.ctrl_seq = snap.get("ctrl_seq", 0)
         core._build_policies()
         return core

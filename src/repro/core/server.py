@@ -42,6 +42,20 @@ __all__ = [
     "PENDING", "ASSIGNED", "DONE", "TIMED_OUT", "PRUNED", "FAILED_POOL",
 ]
 
+# instance-name counter floor applied after restoring any snapshot: the
+# snapshotting primary may allocate more names before this server acts
+# on the restored core, and colliding instance names would cross wires
+_RESTORE_NAME_FLOOR = 10_000
+
+
+def _restore_core(blob: bytes):
+    """Restore a serialized core (see ``Server.serialize_state``).
+    Returns (core, replication-stream position)."""
+    st = pickle.loads(blob)
+    core = SchedulerCore.restore(st["core"])
+    core._client_counter = max(core._client_counter, _RESTORE_NAME_FLOOR)
+    return core, st.get("rep", 0)
+
 
 class Server:
     def __init__(self, tasks, engine, config: ServerConfig | None = None,
@@ -67,6 +81,21 @@ class Server:
         self.primary_last_health = None
         self._direct_buffer: dict[str, list[Message]] = {}
         self._deferred_handshakes: list[Message] = []
+
+        # replication-stream numbering: every state-bearing message to the
+        # backup (FORWARD / NEW_CLIENT / CLIENT_TERMINATED / BROADCAST)
+        # carries a contiguous counter, so a backup behind a partition
+        # detects the gap on the first message that gets through and
+        # resyncs from a fresh snapshot instead of silently split-braining
+        self._rep_seq = 0                    # primary: next number to send
+        self._expect_rep = 0                 # backup: next number expected
+        self._resync_pending = False
+        self._last_resync_req = -1e18
+
+        # client-link partition tracking (LinkLost/LinkHealed into the core)
+        self._links_down: set[str] = set()
+        self._last_link_poll = -1e18
+        self._peer_was_down = False
 
         # ready-set polling: recv-wire -> client name (and the reverse),
         # so engines that track deliveries let us drain only endpoints
@@ -184,6 +213,15 @@ class Server:
     # ------------------------------------------------------------------
     # effect execution
     # ------------------------------------------------------------------
+    def _send_backup(self, mtype, body: dict):
+        """Numbered send on the replication stream (primary -> backup)."""
+        if self.backup_endpoint is None:
+            return
+        body = dict(body)
+        body["rep"] = self._rep_seq
+        self._rep_seq += 1
+        self.backup_endpoint.send(Message(mtype, self.name, body))
+
     def _apply(self, eff, now: float):
         if isinstance(eff, Send):
             ci = self.core.clients.get(eff.client)
@@ -193,15 +231,14 @@ class Server:
             # like a deleted VM's queue
             if ci is not None and ci.endpoint is not None:
                 ci.endpoint.send(Message(eff.mtype, self.name, eff.body,
-                                         srv_seq=eff.srv_seq))
+                                         srv_seq=eff.srv_seq,
+                                         ctrl_seq=eff.ctrl_seq))
         elif isinstance(eff, TerminateInstance):
             self._disown_endpoint(eff.name)
             if self.role == "primary":
                 self.engine.terminate_instance(eff.name)
-                if self.backup_endpoint is not None:
-                    self.backup_endpoint.send(
-                        Message(MsgType.CLIENT_TERMINATED, self.name,
-                                {"name": eff.name}))
+                self._send_backup(MsgType.CLIENT_TERMINATED,
+                                  {"name": eff.name})
         elif isinstance(eff, CreateInstance):
             self._execute_create(eff, now)
 
@@ -225,6 +262,10 @@ class Server:
     def _broadcast(self, mtype, now: float):
         for eff in self.core.control_broadcast(mtype):
             self._apply(eff, now)
+        # the backup mirrors the broadcast (consuming the same ctrl_seq in
+        # its own core and re-sending on the backup channels — the clients
+        # dedup, and a takeover's ctrl counter stays aligned)
+        self._send_backup(MsgType.BROADCAST, {"mtype": mtype})
 
     # ------------------------------------------------------------------
     # the run loop (paper §b)
@@ -249,7 +290,7 @@ class Server:
         #    accepted — client handshakes are deferred, per the paper's
         #    "stops accepting handshake requests from new client instances")
         self._handle_handshakes()
-        # poll backup health
+        # poll backup health (and resync requests after a partition)
         if self.backup_endpoint is not None:
             while True:
                 m = self.backup_endpoint.poll()
@@ -257,7 +298,17 @@ class Server:
                     break
                 if m.type == MsgType.HEALTH_UPDATE:
                     self.backup_last_health = now
+                elif m.type == MsgType.RESYNC_REQUEST:
+                    # the backup missed part of the replication stream
+                    # (partitioned pb link): ship a fresh snapshot — it
+                    # re-bases on it instead of drifting or split-braining
+                    self.backup_endpoint.send(
+                        Message(MsgType.SYNC_STATE, self.name,
+                                {"state": self.serialize_state()}))
             self._mark_drained(self.backup_endpoint)
+
+        # client-link partition detection -> typed core events
+        self._poll_client_links(now)
 
         # 3. client messages (deferred entirely while frozen so the backup
         #    snapshot + forwarded stream is a consistent replay); engines
@@ -291,10 +342,28 @@ class Server:
             msg = ci.endpoint.poll()
             if msg is None:
                 break
-            if self.backup_endpoint is not None:
-                self.backup_endpoint.send(
-                    Message(MsgType.FORWARD, self.name, {"msg": msg}))
+            self._send_backup(MsgType.FORWARD, {"msg": msg})
             self.process_client_message(msg)
+
+    def _poll_client_links(self, now: float):
+        """Diff the engine's link-state view of this server's client links
+        (at heartbeat cadence) into LinkLost/LinkHealed core events, so
+        liveness can grant partition grace.  Engines without a fault plane
+        (Local/GCE) simply never report a partition."""
+        down_fn = getattr(self.engine, "link_down", None)
+        if down_fn is None \
+                or now - self._last_link_poll < self.config.health_interval:
+            return
+        self._last_link_poll = now
+        label = "primary" if self.role == "primary" else "backup"
+        for cname in list(self.core.clients):
+            down = down_fn(label, cname)
+            if down and cname not in self._links_down:
+                self._links_down.add(cname)
+                self.core.on_link_lost(cname, now)
+            elif not down and cname in self._links_down:
+                self._links_down.discard(cname)
+                self.core.on_link_healed(cname, now)
 
     def _make_tick(self, now: float, can_create: bool) -> Tick:
         pending_map = getattr(self.engine, "pending", None) or {}
@@ -344,22 +413,21 @@ class Server:
                 ci = self.core.client_joined(name, self.now(),
                                              endpoint=pending.primary_side)
                 self._own_endpoint(ci)
-                if self.backup_endpoint is not None:
-                    self.backup_endpoint.send(
-                        Message(MsgType.NEW_CLIENT, self.name,
-                                {"name": name, "srv_seq": ci.srv_seq,
-                                 "last_client_seq": ci.last_client_seq}))
+                self._send_backup(MsgType.NEW_CLIENT,
+                                  {"name": name, "srv_seq": ci.srv_seq,
+                                   "last_client_seq": ci.last_client_seq})
             elif kind == "backup":
                 self.backup_endpoint = pending.primary_side
                 self.backup_name = name
                 self.backup_last_health = self.now()
                 self.backup_pending = False
-                # register existing clients with the new backup
+                # register existing clients with the new backup (it starts
+                # expecting rep numbers from the counter embedded in the
+                # snapshot it restored, which is exactly where we are)
                 for cname, ci in self.core.clients.items():
-                    self.backup_endpoint.send(
-                        Message(MsgType.NEW_CLIENT, self.name,
-                                {"name": cname, "srv_seq": ci.srv_seq,
-                                 "last_client_seq": ci.last_client_seq}))
+                    self._send_backup(MsgType.NEW_CLIENT,
+                                      {"name": cname, "srv_seq": ci.srv_seq,
+                                       "last_client_seq": ci.last_client_seq})
                 # unfreeze: clients may resume
                 self._broadcast(MsgType.RESUME, self.now())
                 self.frozen = False
@@ -398,8 +466,29 @@ class Server:
                         self._broadcast(MsgType.RESUME, now)
                         self.frozen = False
 
-    def _check_backup_health(self, now: float):
+    def _peer_link_down(self) -> bool:
+        down_fn = getattr(self.engine, "link_down", None)
+        return down_fn is not None and down_fn("primary", "backup")
+
+    def _peer_liveness(self, now: float, last_health):
+        """Liveness allowance for the server peer (the pb link), shared by
+        backup reaping and takeover: silence behind a *known* partition
+        gets partition_grace_s (it explains the silence — killing/taking
+        over a live peer would lose state or split-brain), and a heal
+        restarts the health window (the peer's first post-heal heartbeat
+        may still be in flight).  Returns (limit, last_health)."""
         limit = self.config.health_update_limit
+        down = self._peer_link_down()
+        if down:
+            limit += self.config.partition_grace_s
+        elif self._peer_was_down and last_health is not None:
+            last_health = max(last_health, now)
+        self._peer_was_down = down
+        return limit, last_health
+
+    def _check_backup_health(self, now: float):
+        limit, self.backup_last_health = \
+            self._peer_liveness(now, self.backup_last_health)
         if self.backup_endpoint is not None \
                 and self.backup_last_health is not None \
                 and now - self.backup_last_health > limit:
@@ -429,21 +518,21 @@ class Server:
     # backup-server machinery (paper §fault tolerance)
     # ------------------------------------------------------------------
     def serialize_state(self) -> bytes:
-        return pickle.dumps({"core": self.core.snapshot()})
+        # "rep" pins where the replication stream stands at snapshot time:
+        # the restoring backup expects the next numbered message from here
+        return pickle.dumps({"core": self.core.snapshot(),
+                             "rep": self._rep_seq})
 
     @classmethod
     def from_snapshot(cls, blob: bytes, engine, name: str = "backup"):
-        st = pickle.loads(blob)
         srv = cls.__new__(cls)
         srv.engine = engine
-        srv.core = SchedulerCore.restore(st["core"])
-        # avoid instance-name collisions with anything the primary created
-        # after the snapshot was taken
-        srv.core._client_counter = max(srv.core._client_counter, 10_000)
+        srv.core, expect_rep = _restore_core(blob)
         srv.config = srv.core.config
         srv.name = name
         srv.role = "backup"
         srv._init_shell_state()
+        srv._expect_rep = expect_rep
         return srv
 
     def backup_bootstrap(self, primary_endpoint, handshake_send):
@@ -459,6 +548,37 @@ class Server:
         handshake_send.send(Message(MsgType.HANDSHAKE, self.name,
                                     body={"kind": "backup"}))
 
+    # message types whose loss desyncs the backup's mirror — all carry a
+    # contiguous "rep" number so the first one through after a partition
+    # exposes the gap
+    _REPLICATED = (MsgType.FORWARD, MsgType.NEW_CLIENT,
+                   MsgType.CLIENT_TERMINATED, MsgType.BROADCAST)
+
+    def _request_resync(self, now: float):
+        self._resync_pending = True
+        self._last_resync_req = now
+        self.primary_endpoint.send(
+            Message(MsgType.RESYNC_REQUEST, self.name))
+
+    def _apply_sync_state(self, blob: bytes, now: float):
+        """Re-base the mirror on a fresh primary snapshot (post-partition
+        recovery): restore the core, re-own the clients' backup channels
+        and drop buffered direct copies the snapshot already covers."""
+        self.core, self._expect_rep = _restore_core(blob)
+        self._resync_pending = False
+        self._wire_owner.clear()
+        self._owned_wires.clear()
+        for cname, ci in self.core.clients.items():
+            ci.endpoint = self.engine.backup_endpoint(cname)
+            ci.last_health = now
+            self._own_endpoint(ci)
+            buf = self._direct_buffer.get(cname, [])
+            self._direct_buffer[cname] = [
+                m for m in buf if m.seq > ci.last_client_seq]
+        for cname in list(self._direct_buffer):
+            if cname not in self.core.clients:
+                self._direct_buffer.pop(cname)
+
     def _step_backup(self):
         now = self.now()
         # health to primary
@@ -466,17 +586,42 @@ class Server:
             self.primary_endpoint.send(
                 Message(MsgType.HEALTH_UPDATE, self.name))
             self._last_peer_health_sent = now
+        # an unanswered resync request is re-sent at heartbeat cadence
+        # (the request itself crosses the same partitioned link)
+        if self._resync_pending \
+                and now - self._last_resync_req >= self.config.health_interval:
+            self._request_resync(now)
         # messages from the primary
         while True:
             m = self.primary_endpoint.poll()
             if m is None:
                 break
+            if m.type in self._REPLICATED:
+                rep = (m.body or {}).get("rep")
+                if rep is not None:
+                    if self._resync_pending:
+                        # stale mirror: everything until SYNC_STATE is
+                        # already covered by the snapshot we asked for
+                        continue
+                    if rep != self._expect_rep:
+                        self._request_resync(now)
+                        continue
+                    self._expect_rep = rep + 1
             if m.type == MsgType.HEALTH_UPDATE:
+                self.primary_last_health = now
+            elif m.type == MsgType.SYNC_STATE:
+                self._apply_sync_state(m.body["state"], now)
                 self.primary_last_health = now
             elif m.type == MsgType.FORWARD:
                 inner: Message = m.body["msg"]
                 self._pop_direct(inner)
                 self.process_client_message(inner)
+            elif m.type == MsgType.BROADCAST:
+                # mirror the primary's control broadcast: consume the same
+                # ctrl_seq in our core and re-send on the backup channels
+                # (clients dedup whichever copy arrives second)
+                for eff in self.core.control_broadcast(m.body["mtype"]):
+                    self._apply(eff, now)
             elif m.type == MsgType.NEW_CLIENT:
                 b = m.body
                 ci = self.core.register_client(
@@ -489,6 +634,8 @@ class Server:
                 self._disown_endpoint(m.body["name"])
                 self._direct_buffer.pop(m.body["name"], None)
         self._mark_drained(self.primary_endpoint)
+        # client-link partition detection -> typed core events
+        self._poll_client_links(now)
         # direct copies from clients -> buffer (a client's endpoint can be
         # None when its instance was deleted while the registration flew)
         def buffer_direct(ci: ClientInfo):
@@ -502,8 +649,13 @@ class Server:
                 if m.type == MsgType.HEALTH_UPDATE:
                     ci.last_health = now
         self._drain_ready(now, buffer_direct)
-        # primary failure -> take over
-        if now - self.primary_last_health > self.config.health_update_limit:
+        # primary failure -> take over.  Silence across a *known*
+        # partition gets partition_grace_s first: taking over while the
+        # primary is alive behind a healable link would split-brain —
+        # beyond the grace we must assume real death and proceed
+        limit, self.primary_last_health = \
+            self._peer_liveness(now, self.primary_last_health)
+        if now - self.primary_last_health > limit:
             self._take_over()
 
     def _pop_direct(self, inner: Message):
@@ -529,6 +681,14 @@ class Server:
             if ep is not None:
                 ep.send(Message(MsgType.SWAP_QUEUES, self.name,
                                 {"new_backup": new_backup}))
+        # force re-grant verification of every in-flight assignment: if
+        # the mirror missed a RESULT (lost FORWARD, no resync before the
+        # primary died) the task would otherwise stay ASSIGNED to a client
+        # that already finished it.  A client still holding the task just
+        # re-ACKs the grant; one that finished re-runs it (at-least-once)
+        for ci in self.core.clients.values():
+            for tid in ci.assigned:
+                ci.unacked[tid] = -1e18
         # process buffered direct messages in order
         for cname in list(self._direct_buffer):
             if cname not in self.core.clients:
@@ -552,6 +712,11 @@ class Server:
         self.backup_endpoint = None
         self.backup_name = None
         self.backup_pending = False
+        self._resync_pending = False
+        # the old primary may have died frozen (mid backup creation, after
+        # STOP): release any stopped clients — clients that already
+        # resumed dedup the ctrl_seq or no-op on a second RESUME
+        self._broadcast(MsgType.RESUME, self.now())
 
     # ------------------------------------------------------------------
     def next_wake(self, now: float) -> float:

@@ -39,6 +39,7 @@ from repro.core.client import Client
 from repro.core.engine import AbstractEngine, PendingInstance, RateLimited
 from repro.core.server import Server, ServerConfig
 from repro.core.task import AbstractTask
+from repro.core.trace import TraceRecorder, TraceReplayer, as_trace
 from repro.core.workerpool import SimWorkerPool
 
 
@@ -142,6 +143,11 @@ class SimParams:
     client_health_interval: float = 1.0   # heartbeat cadence of sim clients
     ready_poll: bool = True            # servers skip endpoints w/o deliveries
     instance_types: dict = field(default_factory=dict)  # kind -> InstanceType
+    # chaos/trace layer (see repro.core.trace and SimNetwork):
+    record_trace: bool = False         # collect a replayable timing trace
+    trace: object = None               # Trace | dict | path: replay mode —
+    #   message delays, creation delays, task runtimes and preemptions come
+    #   from the recorded trace instead of latency/jitter/RNG parameters
 
 
 class SimEngine(AbstractEngine):
@@ -151,6 +157,12 @@ class SimEngine(AbstractEngine):
         self.loop = EventLoop(clock)
         self.loop.enabled = self.params.mode != "fixed"
         self.rng = random.Random(self.params.seed)
+        # fault/timing plane shared by every wire of this engine
+        self.network = transport.SimNetwork(clock)
+        if self.params.record_trace:
+            self.network.recorder = TraceRecorder()
+        if self.params.trace is not None:
+            self.network.replayer = TraceReplayer(as_trace(self.params.trace))
         self.pending: dict[str, PendingInstance] = {}
         self.nodes: dict[str, object] = {}      # name -> Client|Server
         self.server_nodes: dict[str, Server] = {}   # subset of nodes
@@ -171,9 +183,12 @@ class SimEngine(AbstractEngine):
         self._backup_eps: dict[str, transport.SimEndpoint] = {}
         self._client_eps: dict[str, tuple] = {}
         # handshake is a control-plane wire: no jitter, so an instance's
-        # HANDSHAKE is never observed after protocol messages it precedes
+        # HANDSHAKE is never observed after protocol messages it precedes.
+        # It is labelled for trace replay but exempt from partitions (the
+        # public partition API only addresses role/client labels)
         hs_srv, hs_cli = transport.sim_link(
-            clock, self.params.latency, notify_a=self._notify(SERVERS))
+            clock, self.params.latency, notify_a=self._notify(SERVERS),
+            label_a="control", label_b="instances", network=self.network)
         self.handshake_recv = hs_srv
         self._handshake_send = hs_cli
         self.cost_log: list = []                # (name, start, end, rate)
@@ -198,11 +213,12 @@ class SimEngine(AbstractEngine):
             self.loop.wake(_target, t, _q)
         return cb
 
-    def _link(self, recv_a=None, recv_b=None):
+    def _link(self, recv_a=None, recv_b=None, label_a=None, label_b=None):
         a, b = transport.sim_link(
             self.clock, self.params.latency,
             jitter=self.params.latency_jitter, rng=self.rng,
-            notify_a=self._notify(recv_a), notify_b=self._notify(recv_b))
+            notify_a=self._notify(recv_a), notify_b=self._notify(recv_b),
+            label_a=label_a, label_b=label_b, network=self.network)
         if recv_a == SERVERS:
             self._track_server_wire(a)
         if recv_b == SERVERS:
@@ -267,7 +283,12 @@ class SimEngine(AbstractEngine):
         if now - self._last_create < self.params.min_create_interval:
             raise RateLimited()
         self._last_create = now
-        due = now + self._type_attr(kind, "creation_delay")
+        delay = self._type_attr(kind, "creation_delay")
+        if self.network.replayer is not None:
+            delay = self.network.replayer.creation_delay(name, delay)
+        if self.network.recorder is not None:
+            self.network.recorder.record_creation(name, delay)
+        due = now + delay
         # Register the pending record at *creation request* time, exactly
         # like LocalEngine/GCEEngine do — the server's max_clients gate
         # counts len(engine.pending), so deferring registration to
@@ -275,15 +296,19 @@ class SimEngine(AbstractEngine):
         self._kinds[name] = kind
         if kind.startswith("backup"):
             pb_primary, pb_backup = self._link(recv_a=SERVERS,
-                                               recv_b=SERVERS)
+                                               recv_b=SERVERS,
+                                               label_a="primary",
+                                               label_b="backup")
             self.pending[name] = PendingInstance(
                 name, kind, now, primary_side=pb_primary, payload=payload)
             self._boot_eps[name] = (pb_backup,)
         else:
-            p_srv, p_cli = self._link(recv_a=SERVERS, recv_b=name)
+            p_srv, p_cli = self._link(recv_a=SERVERS, recv_b=name,
+                                      label_a="primary", label_b=name)
             self._primary_eps[name] = p_srv
             if self.backup_links:
-                b_srv, b_cli = self._link(recv_a=SERVERS, recv_b=name)
+                b_srv, b_cli = self._link(recv_a=SERVERS, recv_b=name,
+                                          label_a="backup", label_b=name)
                 self._backup_eps[name] = b_srv
             else:
                 b_srv = b_cli = None
@@ -338,14 +363,53 @@ class SimEngine(AbstractEngine):
         old_b = self._backup_eps.get(name)
         if old_b is not None:
             self._primary_eps[name] = old_b
-        b_srv, b_cli = self._link(recv_a=SERVERS, recv_b=name)
+            # the promoted link now carries primary traffic: relabel its
+            # routes so partitions/traces keyed by role follow the role
+            old_b.send_wire.route = ("primary", name)
+            old_b.recv_wire.route = (name, "primary")
+        b_srv, b_cli = self._link(recv_a=SERVERS, recv_b=name,
+                                  label_a="backup", label_b=name)
         self._backup_eps[name] = b_srv
         return b_cli
+
+    # ------------------------------------------------------------------
+    # fault injection: first-class network partitions (per-link,
+    # per-direction) — deliveries on dark routes are silently dropped
+    # ------------------------------------------------------------------
+    def partition(self, a: str, b: str, direction: str = "both",
+                  until: float | None = None):
+        """Drop messages on the a<->b link.  ``a``/``b`` are role or
+        instance labels ("primary", "backup", or a client name);
+        ``direction`` is "both", "a2b" (a's sends to b are lost) or
+        "b2a".  ``until`` auto-heals the partition at that virtual time
+        (a server wake is scheduled so liveness reacts promptly)."""
+        if direction not in ("both", "a2b", "b2a"):
+            raise ValueError(f"bad partition direction: {direction!r}")
+        if direction in ("both", "a2b"):
+            self.network.partition(a, b, until)
+        if direction in ("both", "b2a"):
+            self.network.partition(b, a, until)
+        if until is not None:
+            self.loop.wake(SERVERS, until)
+
+    def heal(self, a: str, b: str):
+        """Remove both directions of an a<->b partition."""
+        self.network.heal(a, b)
+        self.network.heal(b, a)
+        self.loop.wake(SERVERS, self.now())
+
+    def link_down(self, a: str, b: str) -> bool:
+        """True while either direction of the a<->b link is dark (server
+        shells poll this as their partition detector — the simulator
+        stand-in for the connection errors a real transport surfaces)."""
+        return self.network.link_down(a, b)
 
     # ------------------------------------------------------------------
     def kill(self, name):
         """Crash an instance: it stops stepping and its links go dark, but
         it remains listed (the VM is still up and billing)."""
+        if self.network.recorder is not None and self.alive.get(name, False):
+            self.network.recorder.record_preemption(self.now(), name)
         self.alive[name] = False
         node = self.nodes.get(name)
         if node is not None and isinstance(node, Client):
@@ -376,7 +440,8 @@ class SimEngine(AbstractEngine):
                 p_cli, b_cli = boot
                 pool = SimWorkerPool(
                     self._type_attr(kind, "client_workers"), self.clock,
-                    notify=self._notify(name))
+                    notify=self._notify(name),
+                    runtime_fn=self._task_runtime)
                 client = Client(name, p_cli, b_cli, pool,
                                 clock=self.clock.now,
                                 handshake=self._handshake_send,
@@ -384,6 +449,17 @@ class SimEngine(AbstractEngine):
                                 .client_health_interval)
                 self.nodes[name] = client
                 self.loop.wake(name, now)
+
+    def _task_runtime(self, tid, default: float) -> float:
+        """Trace hook: worker pools resolve each task's virtual runtime
+        here, so a loaded trace overrides scripted durations and a
+        recorder captures the ones actually used."""
+        d = default
+        if self.network.replayer is not None:
+            d = self.network.replayer.runtime(tid, d)
+        if self.network.recorder is not None:
+            self.network.recorder.record_runtime(tid, d)
+        return d
 
     def _min_billed_end(self, name: str, start: float, now: float) -> float:
         min_bill = self._type_attr(self._kinds.get(name, "client"),
@@ -441,11 +517,54 @@ class SimCluster:
         self._script: list = []   # (t, fn) sorted
         self._primary_killed = False
         self.loop.wake(SERVERS, 0.0)
+        # trace replay: re-inject the recorded preemptions as scripted
+        # kills (the recording run's spot waves / scripted kills are part
+        # of the trace, so the replay run must not re-script them)
+        if self.engine.network.replayer is not None:
+            for t, name in self.engine.network.replayer.preemptions():
+                if name == "primary":
+                    self.at(t, lambda c: c.kill_primary())
+                else:
+                    self.at(t, lambda c, _n=name: c.engine.kill(_n))
 
     def at(self, t: float, fn):
         self._script.append((t, fn))
         self._script.sort(key=lambda x: x[0])
         self.loop.schedule(t, "script")
+
+    # ------------------------------------------------------------------
+    # chaos scripting: network partitions (see SimEngine.partition)
+    # ------------------------------------------------------------------
+    def partition(self, a: str, b: str, direction: str = "both",
+                  at: float | None = None, until: float | None = None):
+        """Partition the a<->b link, immediately or at virtual time
+        ``at``; ``until`` auto-heals."""
+        if at is None:
+            self.engine.partition(a, b, direction, until)
+        else:
+            self.at(at, lambda c: c.engine.partition(a, b, direction, until))
+
+    def heal(self, a: str, b: str, at: float | None = None):
+        if at is None:
+            self.engine.heal(a, b)
+        else:
+            self.at(at, lambda c: c.engine.heal(a, b))
+
+    # ------------------------------------------------------------------
+    # trace record/replay
+    # ------------------------------------------------------------------
+    def trace(self):
+        """The recorded Trace of this run (requires
+        ``SimParams(record_trace=True)``)."""
+        rec = self.engine.network.recorder
+        if rec is None:
+            raise ValueError("run with SimParams(record_trace=True) "
+                             "to record a trace")
+        return rec.build(meta={"makespan_s": self.clock.now(),
+                               "seed": self.params.seed})
+
+    def write_trace(self, path: str):
+        self.trace().write(path)
 
     def spot_wave(self, t: float, fraction: float):
         """Script a spot-preemption wave: at time ``t`` kill ``fraction`` of
@@ -462,6 +581,9 @@ class SimCluster:
         self.at(t, fn)
 
     def kill_primary(self):
+        rec = self.engine.network.recorder
+        if rec is not None and self.engine.alive.get("primary", False):
+            rec.record_preemption(self.clock.now(), "primary")
         self.engine.alive["primary"] = False
         self._primary_killed = True
 

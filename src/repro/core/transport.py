@@ -61,6 +61,63 @@ def mp_pipe(manager):
 
 
 # ---------------------------------------------------------------------------
+# simulated network fault/timing plane (SimEngine)
+# ---------------------------------------------------------------------------
+class SimNetwork:
+    """Shared per-route state for every ``SimWire`` of one engine: the
+    partition table (fault injection) and the trace record/replay hooks.
+
+    A *route* is a directed label pair ``(src, dst)``; wires carry their
+    route and consult this object on every ``put``.  A dark route drops
+    the delivery silently — like a real one-way link loss, the sender
+    gets no error and the receiver no event.  Partitions optionally
+    auto-heal at ``until`` (lazily: the first query at or past the
+    deadline removes the entry, so both the event-driven and the legacy
+    fixed-dt loop agree on when a route is dark)."""
+
+    def __init__(self, clock):
+        self._clock = clock
+        self._dark: dict[tuple, float | None] = {}  # route -> until | None
+        self.recorder = None            # TraceRecorder (optional)
+        self.replayer = None            # TraceReplayer (optional)
+
+    # -- partitions -----------------------------------------------------
+    def partition(self, src: str, dst: str, until: float | None = None):
+        self._dark[(src, dst)] = until
+
+    def heal(self, src: str, dst: str):
+        self._dark.pop((src, dst), None)
+
+    def is_dark(self, route) -> bool:
+        until = self._dark.get(route, "missing")
+        if until == "missing":
+            return False
+        if until is not None and self._clock.now() >= until:
+            del self._dark[route]       # lazy auto-heal
+            return False
+        return True
+
+    def link_down(self, a: str, b: str) -> bool:
+        """True when either direction of the a<->b link is dark."""
+        return self.is_dark((a, b)) or self.is_dark((b, a))
+
+    def dark_routes(self) -> list:
+        return [r for r in list(self._dark) if self.is_dark(r)]
+
+    # -- trace hooks ----------------------------------------------------
+    def delay(self, route, default: float) -> float:
+        """Per-message delay for ``route``: replayed from a trace when one
+        is loaded, otherwise ``default`` (latency + jitter); recorded when
+        a recorder is attached."""
+        d = default
+        if self.replayer is not None and route is not None:
+            d = self.replayer.next_delay(route, default)
+        if self.recorder is not None and route is not None:
+            self.recorder.record_delay(route, d)
+        return d
+
+
+# ---------------------------------------------------------------------------
 # simulated transport (SimEngine)
 # ---------------------------------------------------------------------------
 class SimWire:
@@ -71,10 +128,13 @@ class SimWire:
     receiving node exactly when the message becomes readable, instead of
     polling every ``dt``.  ``jitter`` adds U[0, jitter) seconds per message
     from a seeded ``rng`` (delivery order within a wire stays FIFO: a
-    message is never readable before its predecessors)."""
+    message is never readable before its predecessors).  ``route`` labels
+    the wire's direction ``(src, dst)`` and ``network`` (a ``SimNetwork``)
+    supplies fault injection (dark routes drop deliveries) and trace
+    record/replay of per-message delays."""
 
     def __init__(self, clock, latency: float = 0.0, jitter: float = 0.0,
-                 rng=None, on_deliver=None):
+                 rng=None, on_deliver=None, route=None, network=None):
         self._clock = clock
         self.latency = latency
         self.jitter = jitter
@@ -82,13 +142,20 @@ class SimWire:
         self._q = collections.deque()   # (deliver_at, msg)
         self.broken = False             # scripted link failure
         self.on_deliver = on_deliver
+        self.route = route
+        self.network = network
 
     def put(self, msg):
         if self.broken:
             return  # dropped, like a dead instance's socket
+        if self.network is not None and self.route is not None \
+                and self.network.is_dark(self.route):
+            return  # partitioned: silently dropped, never deferred
         delay = self.latency
         if self.jitter > 0.0 and self._rng is not None:
             delay += self._rng.uniform(0.0, self.jitter)
+        if self.network is not None:
+            delay = self.network.delay(self.route, delay)
         deliver_at = self._clock.now() + delay
         if self._q and self._q[-1][0] > deliver_at:
             deliver_at = self._q[-1][0]   # FIFO: never overtake
@@ -116,6 +183,10 @@ class SimEndpoint(Endpoint):
     def recv_wire(self) -> SimWire:
         return self._recv
 
+    @property
+    def send_wire(self) -> SimWire:
+        return self._send
+
     def send(self, msg):
         self._send.put(msg)
 
@@ -128,11 +199,20 @@ class SimEndpoint(Endpoint):
 
 
 def sim_link(clock, latency: float = 0.0, jitter: float = 0.0, rng=None,
-             notify_a=None, notify_b=None):
+             notify_a=None, notify_b=None, label_a=None, label_b=None,
+             network=None):
     """Returns (endpoint_a, endpoint_b) — a two-way simulated link.
 
     ``notify_a``/``notify_b`` are delivery callbacks for messages *received*
-    by endpoint a / endpoint b respectively (wire direction b->a feeds a)."""
-    ab = SimWire(clock, latency, jitter, rng, on_deliver=notify_b)
-    ba = SimWire(clock, latency, jitter, rng, on_deliver=notify_a)
+    by endpoint a / endpoint b respectively (wire direction b->a feeds a).
+    ``label_a``/``label_b`` name the two ends for the fault/trace plane:
+    the a->b wire gets route ``(label_a, label_b)`` and vice versa."""
+    route_ab = route_ba = None
+    if label_a is not None and label_b is not None:
+        route_ab = (label_a, label_b)
+        route_ba = (label_b, label_a)
+    ab = SimWire(clock, latency, jitter, rng, on_deliver=notify_b,
+                 route=route_ab, network=network)
+    ba = SimWire(clock, latency, jitter, rng, on_deliver=notify_a,
+                 route=route_ba, network=network)
     return SimEndpoint(ab, ba), SimEndpoint(ba, ab)

@@ -95,14 +95,17 @@ class SimWorkerPool:
 
     ``notify`` (optional, set by the discrete-event engine) is called with
     the timestamp of every scheduled completion so the owning client is
-    woken exactly then instead of being polled every ``dt``."""
+    woken exactly then instead of being polled every ``dt``.
+    ``runtime_fn(task_id, default)`` (optional) resolves the virtual
+    duration — the engine's trace record/replay hook."""
 
-    def __init__(self, n_workers: int, clock, notify=None):
+    def __init__(self, n_workers: int, clock, notify=None, runtime_fn=None):
         self.n_workers = n_workers
         self._clock = clock
         self._running: dict[int, tuple] = {}   # id -> (task, start, end)
         self._pending_started: list[int] = []
         self.notify = notify
+        self.runtime_fn = runtime_fn
 
     def idle(self) -> int:
         return self.n_workers - len(self._running)
@@ -120,6 +123,8 @@ class SimWorkerPool:
     def start(self, task_id: int, task) -> None:
         now = self._clock.now()
         dur = getattr(task, "sim_duration", 1.0)
+        if self.runtime_fn is not None:
+            dur = self.runtime_fn(task_id, dur)
         self._running[task_id] = (task, now, now + dur)
         self._pending_started.append(task_id)
         if self.notify is not None:

@@ -1,0 +1,12 @@
+"""Pallas API-drift shims shared by the TPU kernels.
+
+jax >= 0.5 names the TPU compiler-options struct
+``pltpu.CompilerParams``; older releases call it ``TPUCompilerParams``.
+Resolving it once here keeps every kernel importable on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

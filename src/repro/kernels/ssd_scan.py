@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
+
 
 def _kernel(x_ref, dt_ref, A_ref, b_ref, c_ref, h0_ref, y_ref, hT_ref,
             h_scr, *, chunk: int, has_h0: bool):
@@ -112,7 +114,7 @@ def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 64, h0=None,
             jax.ShapeDtypeStruct((Bsz, H, P, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
