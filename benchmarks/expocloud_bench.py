@@ -15,8 +15,9 @@ import time
 
 sys.path.insert(0, "examples")
 
+from repro.core.experiment import Experiment
 from repro.core.server import ServerConfig
-from repro.core.sim import SimCluster, SimParams, SimTask
+from repro.core.sim import SimParams, SimTask
 
 
 def _workload(n=60, spread=3.0, deadline=None):
@@ -27,21 +28,23 @@ def _workload(n=60, spread=3.0, deadline=None):
 
 
 def _run(tasks, max_clients, use_backup=False, fail_at=None, workers=4):
-    cl = SimCluster(tasks, ServerConfig(max_clients=max_clients,
-                                        use_backup=use_backup,
-                                        health_update_limit=3.0),
-                    SimParams(client_workers=workers))
+    h = Experiment(tasks, engine="sim",
+                   sim=SimParams(client_workers=workers),
+                   config=ServerConfig(max_clients=max_clients,
+                                       use_backup=use_backup,
+                                       health_update_limit=3.0)).run()
+    cl = h.cluster
     if fail_at is not None:
         cl.at(fail_at, lambda c: c.kill_primary())
     t0 = time.perf_counter()
-    srv = cl.run(until=100000)
+    table = h.results(until=100000)
     wall_us = (time.perf_counter() - t0) * 1e6
-    solved = sum(1 for _, r, _ in srv.final_results.rows if r is not None)
+    solved = sum(1 for _, r, _ in table.rows if r is not None)
     return {
         "makespan": cl.clock.now(),
         "cost": cl.engine.total_cost(),
         "solved": solved,
-        "attempted": solved + sum(1 for _, _, s in srv.final_results.rows
+        "attempted": solved + sum(1 for _, _, s in table.rows
                                   if s == "timed_out"),
         "wall_us": wall_us,
     }

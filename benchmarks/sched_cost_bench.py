@@ -32,9 +32,10 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
 
+from repro.core.experiment import Experiment               # noqa: E402
 from repro.core.policy import CostMeter                    # noqa: E402
 from repro.core.server import ServerConfig                 # noqa: E402
-from repro.core.sim import SimCluster, SimParams, SimTask  # noqa: E402
+from repro.core.sim import SimParams, SimTask              # noqa: E402
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -57,11 +58,13 @@ def _run(scale: str, budget_cap: float | None = None) -> dict:
                        workers_hint=WORKERS, scale_policy=scale,
                        budget_cap=budget_cap,
                        budget_reserve_s=BUDGET_RESERVE_S)
-    cl = SimCluster(_workload(), cfg,
-                    SimParams(client_workers=WORKERS, seed=0,
-                              min_billing_s=MIN_BILLING_S))
+    h = Experiment(_workload(), engine="sim",
+                   sim=SimParams(client_workers=WORKERS, seed=0,
+                                 min_billing_s=MIN_BILLING_S),
+                   config=cfg).run()
+    cl = h.cluster
     t0 = time.perf_counter()
-    srv = cl.run(until=3600)
+    table = h.results(until=3600)
     # let the BYE round trips drain so every client instance is closed
     steps = 0
     while len(cl.engine.list_instances()) > 1 and steps < 3000:
@@ -71,22 +74,21 @@ def _run(scale: str, budget_cap: float | None = None) -> dict:
     now = cl.clock.now()
     meter = CostMeter()
     meter.sync(cl.engine.billing_records())
-    assert srv.final_results.cost is not None \
-        and srv.final_results.cost["total"] > 0, "cost column not populated"
-    assert srv.final_results.row_costs is not None \
-        and any(c is not None for c in srv.final_results.row_costs)
+    assert table.cost is not None \
+        and table.cost["total"] > 0, "cost column not populated"
+    assert table.row_costs is not None \
+        and any(c is not None for c in table.row_costs)
     return {
         "scale_policy": scale,
         "budget_cap": budget_cap,
         "clients_created": sum(1 for _, k in cl.engine._kinds.items()
                                if k == "client"),
-        "solved": sum(1 for _, r, _ in srv.final_results.rows
-                      if r is not None),
-        "tasks": len(srv.final_results.rows),
+        "solved": sum(1 for _, r, _ in table.rows if r is not None),
+        "tasks": len(table.rows),
         "makespan_s": round(now, 1),
         "total_cost": round(meter.accrued(now), 1),
         "client_cost": round(meter.by_kind(now).get("client", 0.0), 1),
-        "cost_at_done": srv.final_results.cost["total"],
+        "cost_at_done": table.cost["total"],
         "wall_s": round(wall, 4),
     }
 

@@ -40,6 +40,7 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
 
+from repro.core.experiment import Experiment        # noqa: E402
 from repro.core.server import ServerConfig          # noqa: E402
 from repro.core.sim import SimCluster, SimParams, SimTask   # noqa: E402
 
@@ -54,11 +55,14 @@ def _workload(n: int, dur_lo: float = 1.5, dur_hi: float = 4.0):
 
 
 def _cluster(n_tasks: int, n_clients: int, params: SimParams) -> SimCluster:
-    return SimCluster(
+    # the facade resolves the sim engine; chaos is scripted directly on
+    # the handle's cluster below (the advanced-scripting surface)
+    return Experiment(
         _workload(n_tasks),
-        ServerConfig(max_clients=n_clients, use_backup=True,
-                     health_update_limit=4.0, partition_grace_s=8.0),
-        params)
+        engine="sim", engine_cfg={"params": params},
+        config=ServerConfig(max_clients=n_clients, use_backup=True,
+                            health_update_limit=4.0, partition_grace_s=8.0),
+    ).run().cluster
 
 
 def _script_scenario(cl: SimCluster, scenario: str):

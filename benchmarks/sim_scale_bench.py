@@ -25,9 +25,9 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
 
+from repro.core.experiment import Experiment        # noqa: E402
 from repro.core.server import ServerConfig          # noqa: E402
-from repro.core.sim import (InstanceType, SimCluster, SimParams,  # noqa: E402
-                            SimTask)
+from repro.core.sim import InstanceType, SimParams, SimTask  # noqa: E402
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -70,32 +70,33 @@ def _run_once(n_clients: int, mode: str, scenario: str, spot: bool = False,
             "client": InstanceType(creation_delay=1.5,
                                    cost_per_instance_second=1.0),
         })
-    cl = SimCluster(
+    h = Experiment(
         _workload(n_clients, sc["tasks_per_client"], sc["dur_lo"],
                   sc["dur_hi"]),
-        ServerConfig(max_clients=n_clients, use_backup=False,
-                     health_update_limit=sc["health_limit"]),
-        params)
+        engine="sim", engine_cfg={"params": params},
+        config=ServerConfig(max_clients=n_clients, use_backup=False,
+                            health_update_limit=sc["health_limit"]),
+    ).run()
+    cl = h.cluster
     if spot:
         cl.spot_wave(8.0, 0.25)
     t0 = time.perf_counter()
-    srv = cl.run(until=1e6, max_steps=20_000_000)
+    table = h.results(until=1e6, max_steps=20_000_000)
     wall = time.perf_counter() - t0
     return {
         "n_clients": n_clients,
         "mode": mode,
         "scenario": scenario,
-        "tasks": len(srv.final_results.rows),
-        "solved": sum(1 for _, r, _ in srv.final_results.rows
-                      if r is not None),
+        "tasks": len(table.rows),
+        "solved": sum(1 for _, r, _ in table.rows if r is not None),
         "sim_makespan_s": round(cl.clock.now(), 3),
         "wall_s": round(wall, 4),
         "events": cl.loop.processed,
         "events_per_sec": round(cl.loop.processed / wall) if wall > 0 else 0,
         "sim_s_per_wall_s": round(cl.clock.now() / wall) if wall > 0 else 0,
         "cost": round(cl.engine.total_cost(), 1),
-        "cost_metered": (srv.final_results.cost or {}).get("total"),
-        "rows": srv.final_results.rows,
+        "cost_metered": (table.cost or {}).get("total"),
+        "rows": table.rows,
     }
 
 
@@ -119,14 +120,15 @@ def _mixed_workload(n_clients: int, rounds: int = 3):
 def _run_ready(n_clients: int, ready_poll: bool):
     params = SimParams(client_workers=4, mode="events", seed=0,
                        ready_poll=ready_poll, client_health_interval=5.0)
-    cl = SimCluster(
+    h = Experiment(
         _mixed_workload(n_clients),
-        ServerConfig(max_clients=n_clients, use_backup=False,
-                     health_update_limit=25.0),
-        params)
+        engine="sim", engine_cfg={"params": params},
+        config=ServerConfig(max_clients=n_clients, use_backup=False,
+                            health_update_limit=25.0),
+    ).run()
     t0 = time.perf_counter()
-    srv = cl.run(until=1e6, max_steps=20_000_000)
-    return time.perf_counter() - t0, srv.final_results.rows
+    table = h.results(until=1e6, max_steps=20_000_000)
+    return time.perf_counter() - t0, table.rows
 
 
 def ready_poll_comparison(n_clients: int, repeats: int = 3) -> dict:

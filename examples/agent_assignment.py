@@ -5,14 +5,16 @@ Problem (paper §"The example parameter exploration"): n agents, m tasks done
 sequentially, t_ij = time agent i needs for task j; assign distinct agents
 to tasks minimising total time.  Three algorithm variants:
 
-  * NO_CUTOFFS  — brute-force DFS over assignments,
-  * (classic)   — B&B cutoff on the incumbent,
-  * HEURISTIC   — B&B + admissible lower bound (best remaining agent per
-                  remaining task, reuse allowed).
+  * brute  — brute-force DFS over assignments (NO_CUTOFFS),
+  * bnb    — B&B cutoff on the incumbent,
+  * bnb+h  — B&B + admissible lower bound (best remaining agent per
+             remaining task, reuse allowed).
 
-Each ExpoCloud task = one variant solving one generated instance for one
-(n_tasks, n_agents) setting.  Hardness = (variant, n_tasks, n_agents) —
-exactly the paper's observation that each coordinate is monotone in runtime.
+The exploration is declared with the unified API: a ``ParamSpace`` whose
+axes carry their hardness direction (the paper's observation that each
+coordinate is monotone in runtime) and a ``@task`` function — one cell =
+one variant solving one generated instance for one (n_tasks, n_agents)
+setting.  ``Experiment`` drives it on any engine:
 
 Run locally (real processes, the paper's local engine):
     PYTHONPATH=src python examples/agent_assignment.py --engine local
@@ -27,7 +29,7 @@ import time
 
 import numpy as np
 
-from repro.core.task import AbstractTask, filter_out
+from repro.core import Experiment, ParamSpace, axis, task
 
 
 class Option(enum.Enum):
@@ -35,21 +37,13 @@ class Option(enum.Enum):
     HEURISTIC = "heuristic"
 
 
-def options2hardness(options: frozenset) -> int:
-    """Brute force (2) > classic B&B (1) > B&B+heuristic (0)."""
-    if Option.NO_CUTOFFS in options:
-        return 2
-    if Option.HEURISTIC in options:
-        return 0
-    return 1
-
-
-def options2name(options: frozenset) -> str:
-    if Option.NO_CUTOFFS in options:
-        return "brute"
-    if Option.HEURISTIC in options:
-        return "bnb+h"
-    return "bnb"
+ALG_OPTIONS = {
+    "brute": frozenset({Option.NO_CUTOFFS}),
+    "bnb": frozenset(),
+    "bnb+h": frozenset({Option.HEURISTIC}),
+}
+# Brute force (2) > classic B&B (1) > B&B+heuristic (0).
+ALG_HARDNESS = {"brute": 2, "bnb": 1, "bnb+h": 0}
 
 
 def generate_instance(n_agents: int, n_tasks: int, instance_id: int,
@@ -92,62 +86,44 @@ def bnb_search(t: np.ndarray, options: frozenset):
     return int(best[0]), nodes[0]
 
 
-class AgentAssignmentTask(AbstractTask):
-    """The researcher-written Task class from the paper."""
+def _sim_duration(alg, n_tasks, n_agents, **_):
+    """Virtual duration for the simulator: exponential in problem size,
+    scaled by the variant (mirrors real B&B behaviour)."""
+    factor = {2: 1.0, 1: 0.25, 0: 0.08}[ALG_HARDNESS[alg]]
+    return factor * 1.4 ** (n_tasks + 0.5 * n_agents) * 1e-2
 
-    def __init__(self, options: frozenset, n_tasks: int, n_agents: int,
-                 instance_id: int, deadline: float | None = 10.0,
-                 seed: int = 0):
-        self.options = frozenset(options)
-        self.n_tasks = n_tasks
-        self.n_agents = n_agents
-        self.instance_id = instance_id
-        self.deadline = deadline
-        self.seed = seed
-        # virtual duration for the simulator: exponential in problem size,
-        # scaled by the variant (mirrors real B&B behaviour)
-        factor = {2: 1.0, 1: 0.25, 0: 0.08}[options2hardness(self.options)]
-        self.sim_duration = factor * 1.4 ** (n_tasks + 0.5 * n_agents) * 1e-2
 
-    def parameter_titles(self):
-        return ("alg", "n_tasks", "n_agents", "id")
+@task(result_titles=("optimal_time", "nodes", "seconds"),
+      sim_duration=_sim_duration)
+def solve(alg, n_tasks, n_agents, id):
+    """The researcher-written task function (replaces the paper's 7-method
+    Task subclass — titles, hardness and grouping come from the space)."""
+    t = generate_instance(n_agents, n_tasks, id)
+    t0 = time.time()
+    opt, nodes = bnb_search(t, ALG_OPTIONS[alg])
+    return (opt, nodes, round(time.time() - t0, 4))
 
-    def parameters(self):
-        return (options2name(self.options), self.n_tasks, self.n_agents,
-                self.instance_id)
 
-    def hardness_parameters(self):
-        return (options2hardness(self.options), self.n_tasks, self.n_agents)
-
-    def result_titles(self):
-        return ("optimal_time", "nodes", "seconds")
-
-    def run(self):
-        t = generate_instance(self.n_agents, self.n_tasks, self.instance_id,
-                              self.seed)
-        t0 = time.time()
-        opt, nodes = bnb_search(t, self.options)
-        return (opt, nodes, round(time.time() - t0, 4))
-
-    def timeout(self):
-        return self.deadline
-
-    def group_parameter_titles(self):
-        return filter_out(self.parameter_titles(), ("id",))
+def build_space(max_n_tasks: int = 8,
+                n_instances_per_setting: int = 3) -> ParamSpace:
+    """The paper's nested loops, declared: hardness = (variant, n_tasks,
+    n_agents), each axis monotone in runtime; n_agents is a dependent
+    axis (>= n_tasks)."""
+    return ParamSpace.grid(
+        alg=axis(["brute", "bnb", "bnb+h"],
+                 hardness=lambda v: ALG_HARDNESS[v]),
+        n_tasks=axis(range(2, max_n_tasks + 1), hardness="asc"),
+        n_agents=axis(lambda c: range(c["n_tasks"], max_n_tasks + 1),
+                      hardness="asc"),
+        id=range(n_instances_per_setting),
+    ).bind(solve)
 
 
 def build_tasks(max_n_tasks: int = 8, n_instances_per_setting: int = 3,
                 deadline: float = 5.0):
-    """The paper's nested loops (scaled down for a laptop-sized demo)."""
-    tasks = []
-    for options in [frozenset({Option.NO_CUTOFFS}), frozenset(),
-                    frozenset({Option.HEURISTIC})]:
-        for n_tasks in range(2, max_n_tasks + 1):
-            for n_agents in range(n_tasks, max_n_tasks + 1):
-                for i in range(n_instances_per_setting):
-                    tasks.append(AgentAssignmentTask(
-                        options, n_tasks, n_agents, i, deadline))
-    return tasks
+    """Materialized task list (kept for tests/benchmarks)."""
+    return build_space(max_n_tasks, n_instances_per_setting).tasks(
+        timeout=deadline)
 
 
 def main():
@@ -164,31 +140,23 @@ def main():
                     help="stop scaling when this spend cap is threatened")
     args = ap.parse_args()
 
-    from repro.core.server import Server, ServerConfig
-
-    tasks = build_tasks(args.max_n, args.instances, args.deadline)
-    print(f"{len(tasks)} tasks")
-    config = ServerConfig(min_group_size=args.min_group_size,
-                          max_clients=3, out_dir=args.out,
-                          workers_hint=4, scale_policy=args.scale,
-                          budget_cap=args.budget_cap)
-    if args.engine == "sim":
-        from repro.core.sim import SimCluster, SimParams
-
-        config.use_backup = True
-        cluster = SimCluster(tasks, config, SimParams(client_workers=4))
-        srv = cluster.run(until=3600)
-        table = srv.final_results
-        print(f"simulated makespan {cluster.clock.now():.1f}s, "
-              f"cost {table.cost['total']:.0f} instance-seconds "
-              f"(by kind: {table.cost['by_kind']})")
-    else:
-        from repro.core.engine import LocalEngine
-
-        engine = LocalEngine(n_workers_per_client=2)
-        srv = Server(tasks, engine, config)
-        table = srv.run(poll_sleep=0.05)
-        engine.shutdown()
+    space = build_space(args.max_n, args.instances)
+    print(f"{len(space)} tasks")
+    engine_cfg = {"client_workers": 4} if args.engine == "sim" \
+        else {"n_workers_per_client": 2}
+    exp = Experiment(
+        space.tasks(timeout=args.deadline),
+        engine=args.engine, engine_cfg=engine_cfg,
+        scale=args.scale, budget_cap=args.budget_cap,
+        backup=(args.engine == "sim"),   # paper: no backup locally
+        max_clients=3, out_dir=args.out,
+        min_group_size=args.min_group_size, workers_hint=4)
+    with exp.run() as run:
+        table = run.results(until=3600, poll_sleep=0.05)
+        if args.engine == "sim":
+            print(f"simulated makespan {run.cluster.clock.now():.1f}s, "
+                  f"cost {table.cost['total']:.0f} instance-seconds "
+                  f"(by kind: {table.cost['by_kind']})")
     solved = len(table.solved_rows())
     print(f"solved {solved}/{len(table.rows)} retained rows "
           f"(dropped groups: {len(table.dropped_groups)})")

@@ -1,66 +1,91 @@
-"""Quickstart: the three layers of the framework in ~60 lines.
+"""Quickstart: the three layers of the framework.
 
- 1. ExpoCloud (the paper): run a parameter sweep on the simulated cloud.
+ 1. ExpoCloud (the paper): a parameter sweep through the unified
+    Experiment facade — declare a ParamSpace, decorate a function with
+    @task, run it on the simulated cloud (or engine="local"/"gce"/"tpu":
+    the same call drives real instances).
  2. Substrate: train a reduced LM for a few steps with checkpointing.
  3. Dry-run: lower+compile one cell on a small host-device mesh and print
     its roofline terms (full 512-device runs: repro.launch.sweep_dryrun).
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--section sweep|train|dryrun]
 """
+import argparse
 import os
 import subprocess
 import sys
 import tempfile
 
-# ---------------------------------------------------------------- 1. sweep
-from repro.core.server import ServerConfig
-from repro.core.sim import InstanceType, SimCluster, SimParams, SimTask
+from repro.core import (Experiment, InstanceType, ParamSpace, SpotWave,
+                        axis, task)
 
-tasks = [SimTask((n, 0), ("n", "id"), (n,), sim_duration=0.4 * n,
-                 deadline=3.0, result=(n * n,))
-         for n in range(1, 11)]
-# The simulator is a discrete-event engine: the clock jumps between
-# message deliveries / worker completions, so scenarios with latency
-# jitter, heterogeneous instance types and spot-preemption waves replay
-# deterministically in milliseconds of wall time.
-params = SimParams(
-    client_workers=1, latency_jitter=0.002, seed=0,
-    instance_types={"client": InstanceType(creation_delay=1.0,
-                                           cost_per_instance_second=2.0)})
-cluster = SimCluster(tasks, ServerConfig(max_clients=2, use_backup=False),
-                     params)
-cluster.spot_wave(5.0, 0.5)    # a spot wave takes half the fleet at t=5s
-server = cluster.run(until=600)
-print("[1] ExpoCloud sweep:")
-print("    solved:",
-      [p[0] for p, r, s in server.final_results.rows if r is not None],
-      "| pruned by domino:",
-      [p[0] for p, r, s in server.final_results.rows if s == "pruned"])
-cost = server.final_results.cost   # CostMeter summary, engine -> results
-print(f"    makespan {cluster.clock.now():.1f}s simulated in "
-      f"{cluster.loop.processed} events, "
-      f"cost {cost['total']:.0f} (rate-weighted instance-seconds, "
-      f"by kind: {cost['by_kind']})")
+
+@task(result_titles=("n_squared",), timeout=3.0,
+      sim_duration=lambda n, **_: 0.4 * n)
+def square(n, id):
+    return (n * n,)
+
+
+# ---------------------------------------------------------------- 1. sweep
+def sweep():
+    space = ParamSpace.grid(n=axis(range(1, 11), hardness="asc"), id=[0])
+    exp = Experiment(
+        space.bind(square), engine="sim", max_clients=2,
+        sim=dict(client_workers=1, latency_jitter=0.002, seed=0,
+                 instance_types={"client": InstanceType(
+                     creation_delay=1.0, cost_per_instance_second=2.0)}),
+        chaos=[SpotWave(at=5.0, fraction=0.5)])  # spot wave takes half the
+    with exp.run() as run:                       # fleet at t=5s
+        table = run.results(until=600)
+
+    print("[1] ExpoCloud sweep:")
+    print("    solved:",
+          [p[0] for p, r, s in table.rows if r is not None],
+          "| pruned by domino:",
+          [p[0] for p, r, s in table.rows if s == "pruned"])
+    cost = table.cost   # CostMeter summary, engine -> results
+    cluster = run.cluster
+    print(f"    makespan {cluster.clock.now():.1f}s simulated in "
+          f"{cluster.loop.processed} events, "
+          f"cost {cost['total']:.0f} (rate-weighted instance-seconds, "
+          f"by kind: {cost['by_kind']})")
+
 
 # ---------------------------------------------------------------- 2. train
-from repro.configs import reduced_config
-from repro.data.synthetic import data_config_for
-from repro.train.loop import TrainJob, run_training
+def train():
+    from repro.configs import reduced_config
+    from repro.data.synthetic import data_config_for
+    from repro.train.loop import TrainJob, run_training
 
-cfg = reduced_config("smollm-360m")
-dc = data_config_for(cfg, seq_len=64, batch_size=4)
-with tempfile.TemporaryDirectory() as td:
-    hist, _, _ = run_training(
-        cfg, dc, TrainJob(total_steps=20, ckpt_every=10, ckpt_dir=td,
-                          log_every=10, warmup=5))
-print(f"[2] trained reduced smollm: loss {hist[0]['loss']:.3f} -> "
-      f"{hist[-1]['loss']:.3f}")
+    cfg = reduced_config("smollm-360m")
+    dc = data_config_for(cfg, seq_len=64, batch_size=4)
+    with tempfile.TemporaryDirectory() as td:
+        hist, _, _ = run_training(
+            cfg, dc, TrainJob(total_steps=20, ckpt_every=10, ckpt_dir=td,
+                              log_every=10, warmup=5))
+    print(f"[2] trained reduced smollm: loss {hist[0]['loss']:.3f} -> "
+          f"{hist[-1]['loss']:.3f}")
+
 
 # ---------------------------------------------------------------- 3. dryrun
-print("[3] dry-run one cell on an 8-device host mesh:")
-env = dict(os.environ, PYTHONPATH="src", REPRO_DRYRUN_DEVICES="8")
-subprocess.run(
-    [sys.executable, "-m", "repro.launch.dryrun", "--arch", "mamba2-130m",
-     "--shape", "train_4k", "--mesh-shape", "2", "4",
-     "--mesh-axes", "data", "model"],
-    env=env, check=True)
+def dryrun():
+    print("[3] dry-run one cell on an 8-device host mesh:")
+    env = dict(os.environ, PYTHONPATH="src", REPRO_DRYRUN_DEVICES="8")
+    subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "mamba2-130m", "--shape", "train_4k", "--mesh-shape", "2", "4",
+         "--mesh-axes", "data", "model"],
+        env=env, check=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", choices=["all", "sweep", "train", "dryrun"],
+                    default="all")
+    args = ap.parse_args()
+    if args.section in ("all", "sweep"):
+        sweep()
+    if args.section in ("all", "train"):
+        train()
+    if args.section in ("all", "dryrun"):
+        dryrun()

@@ -1,13 +1,48 @@
-# ExpoCloud — the paper's contribution, reproduced faithfully:
-#   task.py / hardness.py   — AbstractTask, hardness partial order, min_hard
-#   server.py / client.py   — pull-model primary/backup protocol
-#   engine.py               — create/terminate/list engine abstraction
-#   sim.py                  — deterministic virtual-clock cloud simulator
-#   sweep.py                — ML-cell bridge (arch x shape x mesh tasks)
+# ExpoCloud — the paper's contribution, reproduced and grown:
+#   space.py / experiment.py — declarative ParamSpace + @task + the
+#                              one-call Experiment facade (RunHandle
+#                              streams typed RunEvents)
+#   engines.py               — name -> engine factory registry
+#   task.py / hardness.py    — AbstractTask, hardness partial order, min_hard
+#   scheduler.py / policy.py — pure SchedulerCore + pluggable policies
+#   server.py / client.py    — pull-model primary/backup protocol shell
+#   engine.py                — create/terminate/list engine abstraction
+#   sim.py                   — deterministic virtual-clock cloud simulator
+#   sweep.py                 — ML-cell bridge (arch x shape x mesh tasks)
+from repro.core import engines
+from repro.core.engine import (AbstractEngine, EngineUnavailable, GCEEngine,
+                               LocalEngine, RateLimited, TPUPodEngine)
+from repro.core.experiment import (CostTick, Experiment, InstanceCreated,
+                                   InstancePreempted, InstanceTerminated,
+                                   KillPrimary, Partition, RunDone, RunEvent,
+                                   RunHandle, SpotWave, TaskPruned,
+                                   TaskSolved, TaskTimedOut)
 from repro.core.hardness import Hardness, MinHardSet
 from repro.core.messages import Message, MsgType
+from repro.core.policy import (AssignPolicy, BudgetPolicy, CostMeter,
+                               ScalePolicy)
+from repro.core.results import ResultsTable
 from repro.core.server import Server, ServerConfig
+from repro.core.sim import InstanceType, SimCluster, SimParams, SimTask
+from repro.core.space import Axis, ParamSpace, axis, task
 from repro.core.task import AbstractTask
 
-__all__ = ["Hardness", "MinHardSet", "Message", "MsgType", "Server",
-           "ServerConfig", "AbstractTask"]
+__all__ = [
+    # unified experiment API (the front door)
+    "Experiment", "RunHandle", "ParamSpace", "Axis", "axis", "task",
+    "engines",
+    # typed run events + chaos directives
+    "RunEvent", "TaskSolved", "TaskPruned", "TaskTimedOut",
+    "InstanceCreated", "InstanceTerminated", "InstancePreempted",
+    "CostTick", "RunDone", "SpotWave", "Partition", "KillPrimary",
+    # tasks / hardness / results
+    "AbstractTask", "Hardness", "MinHardSet", "ResultsTable",
+    # engines
+    "AbstractEngine", "LocalEngine", "GCEEngine", "TPUPodEngine",
+    "RateLimited", "EngineUnavailable",
+    # simulator + server stack (advanced / deprecated direct wiring)
+    "SimCluster", "SimParams", "SimTask", "InstanceType",
+    "Server", "ServerConfig", "Message", "MsgType",
+    # policies + cost
+    "AssignPolicy", "ScalePolicy", "BudgetPolicy", "CostMeter",
+]

@@ -16,10 +16,13 @@ Engines shipped:
 from __future__ import annotations
 
 import multiprocessing as mp
+import os
 import shutil
+import signal
 import subprocess
 import time
-from dataclasses import dataclass, field
+import warnings
+from dataclasses import dataclass
 
 from repro.core import transport
 
@@ -79,6 +82,20 @@ class AbstractEngine:
     def cost_rate(self, kind: str) -> float:
         return 1.0
 
+    # --- lifecycle ---------------------------------------------------
+    # Every engine is a context manager: ``with engines.make(...) as e``
+    # guarantees instances/processes are reaped even when an exception
+    # fires between create_instance and an explicit shutdown() call.
+    def shutdown(self) -> None:
+        """Release engine resources.  Idempotent; base engine holds none."""
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        self.shutdown()
+        return False
+
     # server-side attach: engines own the handshake channel + endpoint books
     handshake_recv: transport.Channel
     pending: dict
@@ -98,6 +115,12 @@ def _client_process_main(name, primary_send, primary_recv, handshake_q,
     from repro.core.client import Client
     from repro.core.workerpool import ProcessWorkerPool
 
+    # own process group: the engine can reap this client *and* the worker
+    # processes it spawned with one killpg, even after a hard error path
+    try:
+        os.setpgrp()
+    except OSError:
+        pass
     chan = transport.MPChannel(primary_send, primary_recv)
     hs = transport.MPChannel(handshake_q, handshake_q)
     client = Client(name, chan, backup_channel=None,
@@ -126,6 +149,8 @@ class LocalEngine(AbstractEngine):
     def create_instance(self, kind, name, payload=None):
         if kind != "client":
             raise EngineUnavailable("LocalEngine runs without a backup server")
+        if self._mgr is None:
+            raise EngineUnavailable("LocalEngine already shut down")
         q_c2s, q_s2c = self._mgr.Queue(), self._mgr.Queue()
         server_side = transport.MPChannel(q_s2c, q_c2s)  # send s->c, recv c->s
         proc = mp.Process(
@@ -139,11 +164,32 @@ class LocalEngine(AbstractEngine):
         self.pending[name] = PendingInstance(
             name, kind, self.now(), primary_side=server_side)
 
+    @staticmethod
+    def _kill_group(p: mp.Process, sig) -> bool:
+        """Signal the client's whole process group (client + its worker
+        processes — the child called setpgrp, so pgid == its pid)."""
+        try:
+            os.killpg(p.pid, sig)
+            return True
+        except (ProcessLookupError, PermissionError, OSError):
+            return False
+
     def terminate_instance(self, name):
         p = self._procs.pop(name, None)
-        if p is not None and p.is_alive():
-            p.terminate()
-            p.join(timeout=5)
+        if p is not None:
+            if p.is_alive():
+                if not self._kill_group(p, signal.SIGTERM):
+                    p.terminate()
+                p.join(timeout=5)
+            if p.is_alive():          # stuck past SIGTERM: escalate
+                if not self._kill_group(p, signal.SIGKILL):
+                    p.kill()
+                p.join(timeout=5)
+            else:
+                # the client may have died on its own (crash/OOM),
+                # orphaning daemon workers in its process group — reap
+                # the group regardless (no-op if it is already gone)
+                self._kill_group(p, signal.SIGKILL)
         self.pending.pop(name, None)
         rec = self._billing.get(name)
         if rec is not None and rec[3] is None:
@@ -160,7 +206,9 @@ class LocalEngine(AbstractEngine):
     def shutdown(self):
         for name in list(self._procs):
             self.terminate_instance(name)
-        self._mgr.shutdown()
+        if self._mgr is not None:
+            self._mgr.shutdown()
+            self._mgr = None
 
 
 # ---------------------------------------------------------------------------
@@ -182,17 +230,31 @@ class GCEEngine(AbstractEngine):
         self.pending: dict[str, PendingInstance] = {}
         self._kinds: dict[str, str] = {}
         self._billing: dict[str, list] = {}   # name -> [kind, rate, t0, t1]
+        self._rate_fallback_warned: set[str] = set()
 
     def now(self) -> float:
         return time.time()
 
     def cost_rate(self, kind: str) -> float:
-        """$/instance-second; configurable per kind via the optional
-        ``cost_rates`` config key (scalar or kind->rate mapping)."""
-        rates = self.config.get("cost_rates", 1.0)
+        """$/instance-second from the ``cost_rates`` config key (scalar or
+        kind->rate mapping).  An unconfigured kind falls back to 1.0 with
+        a once-per-kind warning — a silent 1.0 would make real-run cost
+        summaries quietly wrong."""
+        rates = self.config.get("cost_rates")
         if isinstance(rates, dict):
-            return float(rates.get(kind, 1.0))
-        return float(rates)
+            if kind in rates:
+                return float(rates[kind])
+        elif rates is not None:
+            return float(rates)
+        if kind not in self._rate_fallback_warned:
+            self._rate_fallback_warned.add(kind)
+            warnings.warn(
+                f"{type(self).__name__}: no cost rate configured for "
+                f"instance kind {kind!r}; falling back to 1.0 "
+                f"$/instance-second — set config['cost_rates'] "
+                f"(scalar or {{kind: rate}}) for true cost summaries",
+                stacklevel=2)
+        return 1.0
 
     def billing_records(self):
         return [(name, kind, rate, t0, t1)
@@ -252,6 +314,18 @@ class GCEEngine(AbstractEngine):
         out = self._run(self.list_command())
         prefix = self.config["prefix"] + "-"
         return [line[len(prefix):] for line in out.splitlines() if line]
+
+    def shutdown(self):
+        """Best-effort: delete every instance this engine created whose
+        billing interval is still open (real VMs keep billing after the
+        driver process dies — the context-manager exit is the backstop)."""
+        for name, rec in list(self._billing.items()):
+            if rec[3] is None:
+                try:
+                    self.terminate_instance(name)
+                except Exception as e:   # noqa: BLE001 — best-effort reap
+                    warnings.warn(f"shutdown: could not delete instance "
+                                  f"{name!r}: {e}", stacklevel=2)
 
 
 class TPUPodEngine(GCEEngine):

@@ -28,6 +28,7 @@ run-loop actions (paper §"The primary server" b):
 from __future__ import annotations
 
 import pickle
+import warnings
 
 from repro.core.messages import Message, MsgType
 from repro.core.policy import CostMeter
@@ -59,7 +60,14 @@ def _restore_core(blob: bytes):
 
 class Server:
     def __init__(self, tasks, engine, config: ServerConfig | None = None,
-                 name: str = "primary", role: str = "primary"):
+                 name: str = "primary", role: str = "primary",
+                 _internal: bool = False):
+        if not _internal:
+            warnings.warn(
+                "hand-wiring Server(tasks, engine, config) is deprecated; "
+                "use repro.core.Experiment(tasks, engine=...) — the facade "
+                "wires engines, policies and results identically across "
+                "sim/local/gce/tpu", DeprecationWarning, stacklevel=2)
         self.engine = engine
         self.config = config or ServerConfig()
         self.name = name
@@ -533,6 +541,21 @@ class Server:
         srv.role = "backup"
         srv._init_shell_state()
         srv._expect_rep = expect_rep
+        return srv
+
+    @classmethod
+    def resume_primary(cls, blob: bytes, engine, name: str = "primary"):
+        """Resume an interrupted run from a serialized snapshot as a fresh
+        *primary* on a fresh engine: solved results and pruning state are
+        kept; clients of the old fleet are gone, so their in-flight
+        assignments are requeued (at-least-once — a task that finished
+        but whose RESULT missed the snapshot re-runs)."""
+        srv = cls.from_snapshot(blob, engine, name=name)
+        srv.role = "primary"
+        now = srv.now()
+        for cname in list(srv.core.clients):
+            # effects are dropped: the old instances don't exist here
+            srv.core.drop_client(cname, now, reassign=True)
         return srv
 
     def backup_bootstrap(self, primary_endpoint, handshake_send):

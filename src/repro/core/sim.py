@@ -32,6 +32,7 @@ import heapq
 import itertools
 import math
 import random
+import warnings
 from dataclasses import dataclass, field
 
 from repro.core import transport
@@ -503,12 +504,18 @@ class SimCluster:
     script: ``at(t, fn)`` callbacks fire once when the clock passes t."""
 
     def __init__(self, tasks, config: ServerConfig | None = None,
-                 params: SimParams | None = None):
+                 params: SimParams | None = None, _internal: bool = False):
+        if not _internal:
+            warnings.warn(
+                "hand-wiring SimCluster(tasks, config, params) is "
+                "deprecated; use repro.core.Experiment(tasks, engine='sim', "
+                "sim=...) — chaos scripting stays available via the run "
+                "handle's .cluster", DeprecationWarning, stacklevel=2)
         self.clock = Clock()
         self.params = params or SimParams()
         self.engine = SimEngine(self.clock, self.params)
         self.loop = self.engine.loop
-        self.server = Server(tasks, self.engine, config)
+        self.server = Server(tasks, self.engine, config, _internal=True)
         self.engine.backup_links = self.server.config.use_backup
         self.engine._instances["primary"] = 0.0
         self.engine._kinds["primary"] = "server"
@@ -688,9 +695,12 @@ class SimCluster:
             node.step()
         self.clock.advance(self.params.dt)
 
-    def run(self, until: float = 1e9, max_steps: int = 200_000,
-            stop_when_done: bool = True) -> Server:
-        """Steps until some acting primary reports done. Returns it."""
+    def steps(self, until: float = 1e9, max_steps: int = 200_000,
+              stop_when_done: bool = True):
+        """Generator form of the drive loop: yields after every step —
+        ``None`` while running, the done acting primary on the final
+        yield (so streaming consumers can observe each step).  Raises
+        TimeoutError when the bounds expire with no done primary."""
         events_mode = self.params.mode != "fixed"
         for _ in range(max_steps):
             if events_mode:
@@ -703,12 +713,22 @@ class SimCluster:
             if stop_when_done:
                 prim = self._done_primary()
                 if prim is not None:
-                    return prim
+                    yield prim
+                    return
+            yield None
         prim = self._done_primary()
         if prim is not None:
-            return prim
+            yield prim
+            return
         raise TimeoutError(
             f"simulation did not finish by t={self.clock.now():.1f}")
+
+    def run(self, until: float = 1e9, max_steps: int = 200_000,
+            stop_when_done: bool = True) -> Server:
+        """Steps until some acting primary reports done. Returns it."""
+        for prim in self.steps(until, max_steps, stop_when_done):
+            if prim is not None:
+                return prim
 
     def _done_primary(self):
         if self.engine.alive.get("primary", False):

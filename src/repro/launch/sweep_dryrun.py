@@ -6,7 +6,8 @@
 The grid is exactly the paper's use case: tasks ordered easiest->hardest by
 static hardness, a deadline per cell, timeouts domino-pruning dominating
 cells, results in a tabular report.  Cells run as subprocesses via the
-LocalEngine (one worker per client — compiles are single-core here).
+unified Experiment facade on the local engine (one worker per client —
+compiles are single-core here).
 
 mode=full   full-config lower+compile per cell (the dry-run proof)
 mode=probe  unrolled small-layer-count probes (roofline extrapolation)
@@ -17,8 +18,8 @@ import argparse
 import time
 
 from repro.configs import cells, get_config
-from repro.core.engine import LocalEngine
-from repro.core.server import Server, ServerConfig
+from repro.core.experiment import Experiment
+from repro.core.server import ServerConfig
 from repro.core.sweep import DryRunCellTask, probe_plans
 
 
@@ -69,7 +70,6 @@ def main(argv=None):
     tasks = build_tasks(args.archs, args.shapes, meshes, modes,
                         args.deadline, args.out, variant)
     print(f"[sweep] {len(tasks)} cells queued")
-    engine = LocalEngine(n_workers_per_client=1)
     config = ServerConfig(
         max_clients=args.max_clients,
         use_backup=False,                  # paper: no backup locally
@@ -80,15 +80,16 @@ def main(argv=None):
         scale_policy=args.scale,
         budget_cap=args.budget_cap,
     )
-    server = Server(tasks, engine, config)
+    exp = Experiment(tasks, engine="local",
+                     engine_cfg={"n_workers_per_client": 1}, config=config)
     t0 = time.time()
-    table = server.run(poll_sleep=0.2)
+    with exp.run() as run:
+        table = run.results(poll_sleep=0.2)
     print(f"[sweep] done in {time.time()-t0:.0f}s")
     print(table.to_csv())
     if table.cost is not None:
         print(f"[sweep] cost: {table.cost['total']:.0f} instance-seconds "
               f"(wall-clock proxy, {table.cost['instances']} instances)")
-    engine.shutdown()
 
 
 if __name__ == "__main__":

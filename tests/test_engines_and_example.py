@@ -2,6 +2,7 @@
 runner; LocalEngine end-to-end) + the paper's B&B example correctness."""
 import sys
 import time
+import warnings
 
 import numpy as np
 import pytest
@@ -62,12 +63,116 @@ def test_tpu_pod_engine_uses_queued_resources():
     assert "--accelerator-type=v5litepod-256" in cmd
 
 
+def test_tpu_pod_engine_delete_and_list_commands():
+    calls = []
+    eng = TPUPodEngine(dict(GCE_CONFIG),
+                       runner=lambda c: calls.append(c) or
+                       "agent-assignment-pod-0\n")
+    eng.create_instance("client", "pod-0")
+    assert eng.list_instances() == ["pod-0"]
+    eng.terminate_instance("pod-0")
+    _create, lst, delete = calls
+    assert lst[2:5] == ["tpus", "queued-resources", "list"]
+    assert delete[2:5] == ["tpus", "queued-resources", "delete"]
+    assert "--force" in delete and "--quiet" in delete
+    assert "agent-assignment-pod-0" in delete
+    # billing interval closed by the delete
+    (rec,) = [r for r in eng.billing_records() if r[0] == "pod-0"]
+    assert rec[4] is not None
+
+
+def test_gce_cost_rate_per_kind_and_warn_once_fallback():
+    eng = GCEEngine(dict(GCE_CONFIG,
+                         cost_rates={"client": 2.5, "backup": 4.0}),
+                    runner=lambda c: "")
+    assert eng.cost_rate("client") == 2.5
+    assert eng.cost_rate("backup") == 4.0
+    with pytest.warns(UserWarning, match="cost_rates"):
+        assert eng.cost_rate("gpu") == 1.0
+    # warned once per kind: the second lookup is silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert eng.cost_rate("gpu") == 1.0
+    # scalar config applies to every kind, no warning
+    eng2 = GCEEngine(dict(GCE_CONFIG, cost_rates=0.5), runner=lambda c: "")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert eng2.cost_rate("anything") == 0.5
+
+
+def test_gce_rate_limited_backoff_path():
+    """A rate-limited creation (injected runner) must grow the server's
+    exponential backoff instead of crashing or retrying immediately."""
+    from repro.core.engine import RateLimited
+    from repro.core.scheduler import CreateInstance
+
+    def limited_runner(cmd):
+        if cmd[3] == "create":
+            raise RateLimited("quota")
+        return ""
+
+    eng = GCEEngine(GCE_CONFIG, runner=limited_runner)
+    srv = Server([], eng, ServerConfig(use_backup=False,
+                                       create_backoff_init=0.5,
+                                       create_backoff_max=4.0),
+                 _internal=True)
+    waits = []
+    for i in range(5):
+        srv._execute_create(CreateInstance("client", f"c{i}"), now=0.0)
+        waits.append(srv._next_create_at)
+    assert waits == [1.0, 2.0, 4.0, 4.0, 4.0]   # doubling, capped
+    assert eng.pending == {}                     # nothing registered
+
+    # a successful creation resets the backoff
+    ok = GCEEngine(GCE_CONFIG, runner=lambda c: "")
+    srv2 = Server([], ok, ServerConfig(use_backup=False,
+                                       create_backoff_init=0.5),
+                  _internal=True)
+    srv2._backoff = 8.0
+    srv2._execute_create(CreateInstance("client", "c0"), now=0.0)
+    assert srv2._backoff == 0.5 and "c0" in ok.pending
+
+
+def test_gce_engine_context_manager_reaps_open_instances():
+    calls = []
+    with GCEEngine(GCE_CONFIG, runner=lambda c: calls.append(c) or "") \
+            as eng:
+        eng.create_instance("client", "c0")
+        eng.create_instance("client", "c1")
+        eng.terminate_instance("c0")
+    deletes = [c for c in calls if c[3] == "delete"]
+    assert len(deletes) == 2          # c0 explicitly + c1 via shutdown
+    assert all(rec[4] is not None for rec in eng.billing_records())
+
+
 class SleepTask(SimTask):
     """Module-level so it pickles across the worker-process boundary."""
 
     def run(self):
         time.sleep(0.2)
         return self._result
+
+
+def test_local_engine_context_manager_reaps_on_error_path():
+    """An exception between create_instance and shutdown() must not leak
+    the client process (group) — the with-block is the backstop."""
+    engine = LocalEngine(n_workers_per_client=1)
+    with pytest.raises(RuntimeError, match="boom"):
+        with engine:
+            engine.create_instance("client", "c0")
+            proc = engine._procs["c0"]
+            for _ in range(100):
+                if proc.is_alive():
+                    break
+                time.sleep(0.05)
+            raise RuntimeError("boom")
+    deadline = time.time() + 10
+    while proc.is_alive() and time.time() < deadline:
+        time.sleep(0.05)
+    assert not proc.is_alive()
+    assert engine.list_instances() == []
+    # idempotent: a second shutdown (or exit) is a no-op
+    engine.shutdown()
 
 
 def test_local_engine_end_to_end():

@@ -1,0 +1,424 @@
+"""Unified experiment API: ParamSpace/@task declarative grids, the
+engines registry, the Experiment facade + streaming RunHandle, and the
+facade-vs-hand-wired equivalence regression."""
+import pickle
+
+import pytest
+
+from repro.core import engines
+from repro.core.experiment import (Experiment, InstanceCreated,
+                                   InstancePreempted, Partition, RunDone,
+                                   SpotWave, TaskPruned, TaskSolved,
+                                   TaskTimedOut)
+from repro.core.server import Server, ServerConfig
+from repro.core.sim import InstanceType, SimCluster, SimParams, SimTask
+from repro.core.space import ParamSpace, axis, task
+
+QUICKSTART_PARAMS = dict(
+    client_workers=1, latency_jitter=0.002, seed=0,
+    instance_types={"client": InstanceType(creation_delay=1.0,
+                                           cost_per_instance_second=2.0)})
+
+
+# module-level @task functions: picklable by reference (backup snapshots,
+# LocalEngine workers)
+@task(result_titles=("n_squared",), timeout=3.0,
+      sim_duration=lambda n, **_: 0.4 * n)
+def square(n, id):
+    return (n * n,)
+
+
+@task(sim_duration=0.1)
+def scalar_result(n):
+    return n + 1          # scalar return is wrapped into a 1-tuple
+
+
+def quickstart_space():
+    return ParamSpace.grid(n=axis(range(1, 11), hardness="asc"), id=[0])
+
+
+def quickstart_sim_tasks():
+    return [SimTask((n, 0), ("n", "id"), (n,), sim_duration=0.4 * n,
+                    deadline=3.0, result=(n * n,)) for n in range(1, 11)]
+
+
+# ---------------------------------------------------------------------------
+# ParamSpace
+# ---------------------------------------------------------------------------
+def test_grid_cells_declaration_order():
+    space = ParamSpace.grid(a=[1, 2], b=["x", "y"])
+    assert space.names == ("a", "b")
+    assert space.cells() == [
+        {"a": 1, "b": "x"}, {"a": 1, "b": "y"},
+        {"a": 2, "b": "x"}, {"a": 2, "b": "y"}]
+    assert len(space) == 4
+
+
+def test_grid_scalar_and_range_axes():
+    space = ParamSpace.grid(n=range(3), tag="fixed")
+    assert all(c["tag"] == "fixed" for c in space)
+    assert [c["n"] for c in space] == [0, 1, 2]
+
+
+def test_dependent_axis_domain():
+    space = ParamSpace.grid(
+        n=axis(range(2, 5), hardness="asc"),
+        m=axis(lambda c: range(c["n"], 5), hardness="asc"))
+    cells = space.cells()
+    assert all(c["m"] >= c["n"] for c in cells)
+    assert len(cells) == 3 + 2 + 1
+
+
+def test_conditional_axis_gates_and_defaults():
+    space = ParamSpace.grid(
+        alg=["plain", "tuned"],
+        lr=axis([0.1, 0.2], when=lambda c: c["alg"] == "tuned",
+                default=None))
+    cells = space.cells()
+    assert {"alg": "plain", "lr": None} in cells
+    assert len([c for c in cells if c["alg"] == "tuned"]) == 2
+    assert len(cells) == 3
+
+
+def test_hardness_directions():
+    space = ParamSpace.grid(
+        n=axis([4, 8], hardness="asc"),
+        cutoff=axis([1, 2], hardness="desc"),
+        variant=axis(["easy", "hard"],
+                     hardness=lambda v: {"easy": 0, "hard": 9}[v]))
+    assert space.hardness_titles() == ("n", "cutoff", "variant")
+    assert space.hardness_of({"n": 8, "cutoff": 1, "variant": "hard"}) \
+        == (8, -1, 9)
+    # non-numeric asc falls back to domain rank
+    space2 = ParamSpace.grid(s=axis(["lo", "hi"], hardness="asc"))
+    assert space2.hardness_of({"s": "hi"}) == (1,)
+
+
+def test_bad_hardness_direction_rejected():
+    with pytest.raises(ValueError, match="hardness"):
+        axis([1, 2], hardness="sideways")
+
+
+def test_rank_hardness_on_dependent_string_domain_rejected():
+    """Cell-relative ranks would make the same value differently hard in
+    different cells — the partial order must stay globally consistent."""
+    space = ParamSpace.grid(
+        n=axis([1, 2], hardness="asc"),
+        size=axis(lambda c: ["s", "m", "l"] if c["n"] == 1 else ["m", "l"],
+                  hardness="asc"))
+    with pytest.raises(ValueError, match="ambiguous"):
+        space.hardness_of({"n": 2, "size": "m"})
+    # numeric dependent domains are fine (the value itself is the rank)
+    ok = ParamSpace.grid(
+        n=axis([1, 2], hardness="asc"),
+        m=axis(lambda c: range(c["n"], 3), hardness="asc"))
+    assert ok.hardness_of({"n": 2, "m": 2}) == (2, 2)
+
+
+# ---------------------------------------------------------------------------
+# @task -> AbstractTask materialization
+# ---------------------------------------------------------------------------
+def test_task_materialization():
+    tasks = quickstart_space().bind(square).tasks()
+    assert len(tasks) == 10
+    t = tasks[2]
+    assert t.parameter_titles() == ("n", "id")
+    assert t.parameters() == (3, 0)
+    assert t.result_titles() == ("n_squared",)
+    assert t.hardness_parameters() == (3,)
+    assert t.timeout() == 3.0
+    assert t.sim_duration == pytest.approx(1.2)
+    assert t.run() == (9,)
+    assert t.group_parameter_titles() == ("n",)   # "id" filtered by default
+
+
+def test_task_timeout_override_and_scalar_wrap():
+    space = ParamSpace.grid(n=axis([1, 2], hardness="asc"))
+    tasks = space.bind(scalar_result).tasks(timeout=7.5)
+    assert tasks[0].timeout() == 7.5
+    assert tasks[0].run() == (2,)
+    assert tasks[0].result_titles() == ("value",)
+
+
+def test_timeout_without_hardness_rejected():
+    space = ParamSpace.grid(n=[1, 2])      # no hardness axis anywhere
+    with pytest.raises(ValueError, match="hardness"):
+        space.bind(scalar_result).tasks(timeout=1.0)
+
+
+def test_unbound_space_rejected():
+    with pytest.raises(ValueError, match="unbound"):
+        ParamSpace.grid(n=[1]).tasks()
+
+
+def test_function_tasks_pickle_by_reference():
+    t = quickstart_space().bind(square).tasks()[4]
+    t2 = pickle.loads(pickle.dumps(t))
+    assert t2.parameters() == t.parameters()
+    assert t2.run() == t.run()
+
+
+# ---------------------------------------------------------------------------
+# engines registry
+# ---------------------------------------------------------------------------
+def test_engines_registry_sim_and_unknown():
+    spec = engines.make("sim", client_workers=2, seed=7)
+    assert isinstance(spec, engines.SimSpec)
+    assert spec.params.client_workers == 2 and spec.params.seed == 7
+    with pytest.raises(ValueError, match="unknown engine"):
+        engines.make("k8s")
+    assert {"sim", "local", "gce", "tpu"} <= set(engines.names())
+
+
+def test_engines_registry_params_xor_kwargs():
+    with pytest.raises(ValueError, match="not both"):
+        engines.make("sim", params=SimParams(), seed=1)
+
+
+def test_engines_registry_custom_registration():
+    made = {}
+
+    def factory(**cfg):
+        made.update(cfg)
+        return engines.SimSpec(SimParams())
+
+    engines.register("mycloud", factory)
+    try:
+        spec = engines.make("mycloud", region="eu")
+        assert isinstance(spec, engines.SimSpec) and made == {"region": "eu"}
+    finally:
+        engines._REGISTRY.pop("mycloud", None)
+
+
+# ---------------------------------------------------------------------------
+# the facade: equivalence regression (acceptance criterion)
+# ---------------------------------------------------------------------------
+def _hand_wired_quickstart_rows():
+    with pytest.warns(DeprecationWarning, match="Experiment"):
+        cl = SimCluster(quickstart_sim_tasks(),
+                        ServerConfig(max_clients=2, use_backup=False),
+                        SimParams(**QUICKSTART_PARAMS))
+    cl.spot_wave(5.0, 0.5)
+    return cl.run(until=600).final_results
+
+
+def test_facade_row_identical_to_hand_wired_simcluster():
+    """The Experiment facade must produce a results table row-identical to
+    the hand-wired SimCluster path — both from a raw task list and from
+    the declarative ParamSpace/@task route."""
+    expected = _hand_wired_quickstart_rows()
+
+    h1 = Experiment(quickstart_sim_tasks(), engine="sim", max_clients=2,
+                    sim=dict(QUICKSTART_PARAMS),
+                    chaos=[SpotWave(at=5.0, fraction=0.5)]).run()
+    assert h1.results(until=600).rows == expected.rows
+
+    h2 = Experiment(quickstart_space().bind(square), engine="sim",
+                    max_clients=2, sim=dict(QUICKSTART_PARAMS),
+                    chaos=[SpotWave(at=5.0, fraction=0.5)]).run()
+    t2 = h2.results(until=600)
+    assert t2.rows == expected.rows
+    assert t2.cost["total"] == expected.cost["total"]
+
+
+def test_old_constructors_still_work_but_warn():
+    with pytest.warns(DeprecationWarning, match="Experiment"):
+        cl = SimCluster([], ServerConfig(use_backup=False))
+    assert cl.server is not None
+    with pytest.warns(DeprecationWarning, match="Experiment"):
+        Server([], cl.engine, ServerConfig(use_backup=False))
+
+
+# ---------------------------------------------------------------------------
+# RunHandle: typed event stream
+# ---------------------------------------------------------------------------
+def test_run_handle_streams_typed_events():
+    exp = Experiment(quickstart_space().bind(square), engine="sim",
+                     max_clients=2, sim=dict(QUICKSTART_PARAMS),
+                     chaos=[SpotWave(at=5.0, fraction=0.5)])
+    with exp.run() as run:
+        evs = list(run.events(until=600))
+        table = run.results()
+    done = evs[-1]
+    assert isinstance(done, RunDone)
+    solved_rows = [p for p, r, _ in table.rows if r is not None]
+    solved_evs = [e for e in evs if isinstance(e, TaskSolved)]
+    assert len(solved_evs) == len(solved_rows) == done.solved
+    # event payloads carry the cell parameters + result
+    assert sorted(e.params[0] for e in solved_evs) \
+        == sorted(p[0] for p in solved_rows)
+    assert any(isinstance(e, TaskTimedOut) for e in evs)
+    assert any(isinstance(e, TaskPruned) for e in evs)
+    assert any(isinstance(e, InstanceCreated) for e in evs)
+    # the spot wave kills half the fleet -> preemption events
+    assert any(isinstance(e, InstancePreempted) for e in evs)
+    assert done.cost == table.cost["total"]
+    # event times are monotone
+    ts = [e.t for e in evs]
+    assert ts == sorted(ts)
+
+
+def test_chaos_partition_directive_and_callable():
+    calls = []
+    exp = Experiment(
+        [SimTask((1, 0), ("n", "id"), (1,), 0.5, None, (1,))],
+        engine="sim", max_clients=1,
+        chaos=[Partition("primary", "client-0", at=100.0, until=101.0),
+               lambda cl: calls.append(cl)])
+    with exp.run() as run:
+        run.results(until=600)
+    assert len(calls) == 1 and isinstance(calls[0], SimCluster)
+
+
+def test_chaos_requires_sim_engine():
+    with pytest.raises(ValueError, match="chaos"):
+        Experiment([], engine="local", chaos=[SpotWave(1.0, 0.5)])
+    # a custom registered name is validated against the *resolved* spec
+    engines.register("realish", lambda **c: engines.make("local", **c))
+    try:
+        h = Experiment([], engine="realish",
+                       chaos=[SpotWave(1.0, 0.5)]).run()
+        with pytest.raises(ValueError, match="chaos"):
+            h.engine  # noqa: B018 — property triggers lazy start
+    finally:
+        engines._REGISTRY.pop("realish", None)
+
+
+def test_chaos_allowed_on_registered_sim_backed_engine():
+    engines.register("simish",
+                     lambda **c: engines.SimSpec(SimParams(**c)))
+    try:
+        exp = Experiment(
+            [SimTask((1, 0), ("n", "id"), (1,), 0.5, None, (1,))],
+            engine="simish", max_clients=1,
+            chaos=[SpotWave(at=100.0, fraction=0.5)])
+        assert exp.run().results(until=600).rows
+    finally:
+        engines._REGISTRY.pop("simish", None)
+
+
+def test_unknown_server_config_field_rejected():
+    with pytest.raises(ValueError, match="ServerConfig"):
+        Experiment([], engine="sim", max_cleints=3)
+
+
+def test_config_conflicts_with_convenience_params():
+    with pytest.raises(ValueError, match="not both"):
+        Experiment([], engine="sim", config=ServerConfig(),
+                   budget_cap=100.0)
+    with pytest.raises(ValueError, match="not both"):
+        Experiment([], engine="sim", config=ServerConfig(),
+                   min_group_size=2)
+
+
+@pytest.mark.parametrize("values,direction,default", [
+    (["hi", "mid", "lo"], "desc", "off"),    # ranked
+    (["lo", "hi"], "asc", "off"),
+    ([10, 20], "desc", 0),                   # numeric fast path
+    ([-5, -2], "asc", 0),                    # negative numeric domain
+    (["easy", "hard"],                       # callable never sees default
+     lambda v: {"easy": 0, "hard": 9}[v], None),
+])
+def test_conditional_default_ranks_easiest(values, direction, default):
+    space = ParamSpace.grid(
+        on=[False, True],
+        lvl=axis(values, hardness=direction,
+                 when=lambda c: c["on"], default=default))
+    declared = [space.hardness_of({"on": True, "lvl": v})[0]
+                for v in values]
+    fallback = space.hardness_of({"on": False, "lvl": default})[0]
+    assert fallback < min(declared)          # easiest, never hardest
+
+
+# ---------------------------------------------------------------------------
+# snapshot / resume
+# ---------------------------------------------------------------------------
+def test_resume_from_snapshot_completes_the_run():
+    space = quickstart_space().bind(square)
+    exp = Experiment(space, engine="sim", max_clients=2,
+                     sim=dict(QUICKSTART_PARAMS))
+    h = exp.run()
+    for _ in range(500):
+        h.cluster.step()
+        if sum(1 for s in h.server.core.status if s == "done") >= 2:
+            break
+    partial = sum(1 for s in h.server.core.status if s == "done")
+    assert 0 < partial < 10
+    blob = h.snapshot()
+
+    h2 = Experiment(space, engine="sim", max_clients=2,
+                    sim=dict(QUICKSTART_PARAMS)).resume(blob)
+    table = h2.results(until=3600)
+    # every task is accounted for; the solved prefix is preserved
+    assert len(table.rows) == 10
+    statuses = {s for _, _, s in table.rows}
+    assert statuses <= {"done", "timed_out", "pruned"}
+    assert sum(1 for _, r, _ in table.rows if r is not None) >= partial
+
+
+def test_resume_of_finished_snapshot_is_stable():
+    exp = Experiment(quickstart_space().bind(square), engine="sim",
+                     max_clients=2, sim=dict(QUICKSTART_PARAMS))
+    h = exp.run()
+    table = h.results(until=600)
+    h2 = exp.resume(h.snapshot())
+    assert h2.results(until=600).rows == table.rows
+
+
+# ---------------------------------------------------------------------------
+# with-scoped shutdown
+# ---------------------------------------------------------------------------
+def test_abandoned_real_event_stream_fails_results_loudly():
+    """Breaking out of events() on a real engine shuts the fleet down; a
+    later results() must raise instead of hanging on a dead fleet."""
+    from repro.core.engine import LocalEngine
+
+    class NeverEngine(LocalEngine):
+        def __init__(self):
+            # skip process machinery: no instance ever handshakes, so the
+            # stream never sees RunDone and we can abandon it mid-run.
+            # One pre-seeded billing record makes the watcher emit an
+            # InstanceCreated event for the loop body to break on.
+            self.pending = {}
+            self._procs = {}
+            self._kinds = {}
+            self._billing = {"ghost": ["client", 1.0, 0.0, None]}
+            self._mgr = None
+
+        def create_instance(self, kind, name, payload=None):
+            pass
+
+        class _Quiet:
+            def poll(self):
+                return None
+        handshake_recv = _Quiet()
+
+        def shutdown(self):
+            self.was_shut = True
+
+    eng = NeverEngine()
+    h = Experiment([SimTask((1, 0), ("n", "id"), (1,), 0.1, None, (1,))],
+                   engine=eng, max_clients=1).run()
+    for _ in h.events(poll_sleep=0.0):
+        break                       # no events come; generator closed
+    assert eng.was_shut
+    with pytest.raises(RuntimeError, match="abandoned"):
+        h.results()
+    # results() wall-clock bound on real engines raises, never hangs
+    h2 = Experiment([SimTask((1, 0), ("n", "id"), (1,), 0.1, None, (1,))],
+                    engine=NeverEngine(), max_clients=1).run()
+    with pytest.raises(TimeoutError):
+        h2.results(until=0.2, poll_sleep=0.0)
+
+
+def test_run_handle_closes_engine_on_exit():
+    closed = []
+
+    exp = Experiment([SimTask((1, 0), ("n", "id"), (1,), 0.1, None, (1,))],
+                     engine="sim", max_clients=1)
+    with exp.run() as run:
+        run.results(until=100)
+        run.engine.shutdown = lambda: closed.append(True)
+    assert closed == [True]
+    run.shutdown()                       # idempotent
+    assert closed == [True]
