@@ -6,6 +6,9 @@ Measures wall-time per call and, for the flash path, peak-memory proxy
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
 import jax
@@ -96,3 +99,27 @@ def run_all():
                bench_pallas_interpret_correctness_path):
         rows.extend(fn())
     return rows
+
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_kernel.json"))
+    args = ap.parse_args(argv)
+    payload = {
+        "bench": "kernel",
+        "rows": [{"name": name, "us": round(us, 1), "note": note}
+                 for name, us, note in run_all()],
+    }
+    for row in payload["rows"]:
+        print(f"{row['name']:32s} {row['us']:10.1f}us  {row['note']}")
+    with open(args.out, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""CLI: ``python -m repro.analysis [--root DIR] [--json] [--rules ...]``.
+
+Exit codes: 0 clean, 1 violations found, 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis.framework import all_rules, run_checks
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="expolint: AST-based invariant checks for the "
+                    "ExpoCloud core, protocol and Pallas kernels.")
+    parser.add_argument("--root", default=".",
+                        help="repository root to check (default: cwd)")
+    parser.add_argument("--json", action="store_true", dest="as_json",
+                        help="emit machine-readable JSON")
+    parser.add_argument("--rules", default=None,
+                        help="comma-separated subset of rule names")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="list available rules and exit")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule in all_rules():
+            print(f"{rule.name}: {rule.description}")
+        return 0
+
+    names = None
+    if args.rules is not None:
+        names = [n.strip() for n in args.rules.split(",") if n.strip()]
+    try:
+        violations = run_checks(args.root, rules=names)
+    except ValueError as exc:
+        print(f"error: {exc}", file=sys.stderr)
+        return 2
+
+    if args.as_json:
+        payload = {
+            "root": args.root,
+            "rules": names or [r.name for r in all_rules()],
+            "violations": [v.to_dict() for v in violations],
+            "ok": not violations,
+        }
+        print(json.dumps(payload, indent=2))
+    else:
+        for v in violations:
+            print(v.format())
+        n = len(violations)
+        print(f"expolint: {n} violation{'s' if n != 1 else ''} found"
+              if n else "expolint: clean")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

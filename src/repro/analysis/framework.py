@@ -1,0 +1,135 @@
+"""Rule framework for expolint (see package docstring).
+
+A ``Rule`` inspects a ``Project`` (lazy AST/source cache rooted at the
+repo) and returns ``Violation``s.  The runner applies suppression
+comments afterwards, so rules never need to know about them:
+
+  * ``# expolint: disable=rule-a,rule-b`` on the flagged line,
+  * ``# expolint: disable-file=rule-a`` anywhere in the file.
+
+Rules address files by repo-relative POSIX paths and must tolerate
+missing files (a fixture mini-project provides only the files its case
+needs; so does a future repo layout change — absent file, no findings).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass
+from pathlib import Path
+
+_SUPPRESS_LINE = re.compile(r"#\s*expolint:\s*disable=([\w,\- ]+)")
+_SUPPRESS_FILE = re.compile(r"#\s*expolint:\s*disable-file=([\w,\- ]+)")
+
+
+@dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str          # repo-relative POSIX path
+    line: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message}
+
+
+class Project:
+    """Lazy source/AST cache over a project root."""
+
+    def __init__(self, root: str | Path):
+        self.root = Path(root)
+        self._sources: dict[str, str | None] = {}
+        self._trees: dict[str, ast.AST | None] = {}
+
+    def exists(self, relpath: str) -> bool:
+        return (self.root / relpath).is_file()
+
+    def source(self, relpath: str) -> str | None:
+        if relpath not in self._sources:
+            p = self.root / relpath
+            self._sources[relpath] = (
+                p.read_text(encoding="utf-8") if p.is_file() else None)
+        return self._sources[relpath]
+
+    def lines(self, relpath: str) -> list[str]:
+        src = self.source(relpath)
+        return src.splitlines() if src is not None else []
+
+    def tree(self, relpath: str) -> ast.AST | None:
+        """Parsed AST, or None when the file is missing or unparsable
+        (a syntax error is ruff/py_compile's job, not expolint's)."""
+        if relpath not in self._trees:
+            src = self.source(relpath)
+            try:
+                self._trees[relpath] = (
+                    None if src is None else ast.parse(src))
+            except SyntaxError:
+                self._trees[relpath] = None
+        return self._trees[relpath]
+
+    def glob(self, pattern: str) -> list[str]:
+        """Repo-relative POSIX paths matching ``pattern``, sorted."""
+        return sorted(
+            p.relative_to(self.root).as_posix()
+            for p in self.root.glob(pattern) if p.is_file())
+
+
+class Rule:
+    """Base class: subclasses set ``name``/``description`` and implement
+    ``check``."""
+
+    name = "abstract"
+    description = ""
+
+    def check(self, project: Project) -> list[Violation]:
+        raise NotImplementedError
+
+    def violation(self, path: str, node_or_line, message: str) -> Violation:
+        line = getattr(node_or_line, "lineno", node_or_line)
+        return Violation(self.name, path, int(line), message)
+
+
+def _suppressed(project: Project, v: Violation) -> bool:
+    lines = project.lines(v.path)
+    for ln in lines:
+        m = _SUPPRESS_FILE.search(ln)
+        if m and v.rule in [s.strip() for s in m.group(1).split(",")]:
+            return True
+    if 1 <= v.line <= len(lines):
+        m = _SUPPRESS_LINE.search(lines[v.line - 1])
+        if m and v.rule in [s.strip() for s in m.group(1).split(",")]:
+            return True
+    return False
+
+
+def all_rules() -> list[Rule]:
+    from repro.analysis.rules import RULES
+
+    return [cls() for cls in RULES]
+
+
+def run_checks(root: str | Path, rules: list[str] | None = None,
+               ) -> list[Violation]:
+    """Run (a subset of) the rules against ``root``; suppression comments
+    already applied.  Unknown rule names raise ValueError."""
+    project = Project(root)
+    selected = all_rules()
+    if rules is not None:
+        by_name = {r.name: r for r in selected}
+        unknown = [n for n in rules if n not in by_name]
+        if unknown:
+            known = ", ".join(sorted(by_name))
+            raise ValueError(
+                f"unknown rule(s) {unknown}; known rules: {known}")
+        selected = [by_name[n] for n in rules]
+    out: list[Violation] = []
+    for rule in selected:
+        for v in rule.check(project):
+            if not _suppressed(project, v):
+                out.append(v)
+    out.sort(key=lambda v: (v.path, v.line, v.rule))
+    return out

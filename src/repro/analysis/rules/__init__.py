@@ -1,0 +1,18 @@
+"""Rule registry — one module per invariant family."""
+from __future__ import annotations
+
+from repro.analysis.rules.exhaustiveness import EffectExhaustivenessRule
+from repro.analysis.rules.pallas import PallasRulesRule
+from repro.analysis.rules.purity import CorePurityRule
+from repro.analysis.rules.seq import SeqDisciplineRule
+from repro.analysis.rules.snapshot import SnapshotCompletenessRule
+
+RULES = [
+    CorePurityRule,
+    EffectExhaustivenessRule,
+    SnapshotCompletenessRule,
+    SeqDisciplineRule,
+    PallasRulesRule,
+]
+
+__all__ = ["RULES"]

@@ -1,0 +1,255 @@
+"""effect-exhaustiveness: no half-wired effects, events or messages.
+
+Three checks, all rooted in how a new protocol arm actually ships:
+
+  1. every **effect** dataclass declared in ``core/scheduler.py`` (the
+     classes under the ``typed effects (outputs)`` banner) must have an
+     ``isinstance`` branch in ``Server._apply`` — the single dispatch
+     point both the primary and the backup execute effects through; an
+     unhandled effect is silently dropped at runtime,
+  2. every **event** dataclass (under the ``typed events (inputs)``
+     banner) must have an ``isinstance`` branch in
+     ``SchedulerCore.handle`` — the replay entry point; an unhandled
+     event kills takeover replay with a TypeError,
+  3. every ``MsgType`` member must be both **produced** (passed to a
+     call: ``Message(MsgType.X, ...)``, ``self._send(ci, MsgType.X)``,
+     ``send_to_servers(MsgType.X)``, ...) and **consumed** (compared
+     against ``msg.type`` or listed in a dispatch container such as
+     ``_REPLICATED``/``_NEEDS_ACK``) somewhere across the core — a
+     member with producers but no consumer is a message the protocol
+     sends into the void; a member with consumers but no producer is a
+     dead protocol arm.  References to undefined members
+     (``MsgType.TYPO``) are flagged too.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.framework import Project, Rule, Violation
+
+SCHEDULER = "src/repro/core/scheduler.py"
+SERVER = "src/repro/core/server.py"
+MESSAGES = "src/repro/core/messages.py"
+CORE_GLOB = "src/repro/core/*.py"
+
+_EVENTS_BANNER = "typed events (inputs)"
+_EFFECTS_BANNER = "typed effects (outputs)"
+
+
+def _is_dataclass(node: ast.ClassDef) -> bool:
+    for dec in node.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = target.attr if isinstance(target, ast.Attribute) else \
+            getattr(target, "id", None)
+        if name == "dataclass":
+            return True
+    return False
+
+
+def _banner_sections(project: Project, path: str) -> tuple[int, int, int]:
+    """(events_start, effects_start, end) line numbers; -1 when a banner
+    is missing."""
+    events = effects = -1
+    for i, ln in enumerate(project.lines(path), 1):
+        if _EVENTS_BANNER in ln and events < 0:
+            events = i
+        elif _EFFECTS_BANNER in ln and effects < 0:
+            effects = i
+    return events, effects, len(project.lines(path)) + 1
+
+
+def _section_dataclasses(tree: ast.AST, start: int,
+                         stop: int) -> list[ast.ClassDef]:
+    return [n for n in ast.iter_child_nodes(tree)
+            if isinstance(n, ast.ClassDef) and _is_dataclass(n)
+            and start < n.lineno < stop]
+
+
+def _find_class(tree: ast.AST, name: str) -> ast.ClassDef | None:
+    for node in ast.iter_child_nodes(tree):
+        if isinstance(node, ast.ClassDef) and node.name == name:
+            return node
+    return None
+
+
+def _find_method(cls: ast.ClassDef, name: str) -> ast.FunctionDef | None:
+    for node in cls.body:
+        if isinstance(node, ast.FunctionDef) and node.name == name:
+            return node
+    return None
+
+
+def _isinstance_targets(func: ast.FunctionDef) -> set[str]:
+    """Class names appearing as the second argument of isinstance calls
+    (single name or tuple of names)."""
+    out: set[str] = set()
+    for node in ast.walk(func):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+                and node.func.id == "isinstance" and len(node.args) == 2:
+            spec = node.args[1]
+            elts = spec.elts if isinstance(spec, ast.Tuple) else [spec]
+            for e in elts:
+                if isinstance(e, ast.Name):
+                    out.add(e.id)
+                elif isinstance(e, ast.Attribute):
+                    out.add(e.attr)
+    return out
+
+
+class EffectExhaustivenessRule(Rule):
+    name = "effect-exhaustiveness"
+    description = ("every effect/event dataclass and every MsgType member "
+                   "must be fully wired (emitted AND handled)")
+
+    def check(self, project: Project) -> list[Violation]:
+        out: list[Violation] = []
+        out.extend(self._check_effects_and_events(project))
+        out.extend(self._check_msgtypes(project))
+        return out
+
+    # ------------------------------------------------------------------
+    # effects -> Server._apply; events -> SchedulerCore.handle
+    # ------------------------------------------------------------------
+    def _check_effects_and_events(self,
+                                  project: Project) -> list[Violation]:
+        tree = project.tree(SCHEDULER)
+        if tree is None:
+            return []
+        events_at, effects_at, eof = _banner_sections(project, SCHEDULER)
+        core = _find_class(tree, "SchedulerCore")
+        out: list[Violation] = []
+        if effects_at < 0 or events_at < 0 or core is None:
+            out.append(self.violation(
+                SCHEDULER, 1,
+                "scheduler.py must keep the `typed events (inputs)` / "
+                "`typed effects (outputs)` banners and the SchedulerCore "
+                "class — expolint classifies the protocol dataclasses "
+                "by them"))
+            return out
+        stop = min(x for x in (core.lineno, eof))
+        events = _section_dataclasses(tree, events_at, effects_at)
+        effects = _section_dataclasses(tree, effects_at, stop)
+
+        handled_events = _isinstance_targets(_find_method(core, "handle")) \
+            if _find_method(core, "handle") else set()
+        for cls in events:
+            if cls.name not in handled_events:
+                out.append(self.violation(
+                    SCHEDULER, cls,
+                    f"event `{cls.name}` has no isinstance branch in "
+                    "SchedulerCore.handle — takeover replay would raise "
+                    "TypeError on it"))
+
+        server_tree = project.tree(SERVER)
+        handled_effects: set[str] = set()
+        if server_tree is not None:
+            server_cls = _find_class(server_tree, "Server")
+            apply_fn = _find_method(server_cls, "_apply") \
+                if server_cls else None
+            if apply_fn is not None:
+                handled_effects = _isinstance_targets(apply_fn)
+        for cls in effects:
+            if cls.name not in handled_effects:
+                out.append(self.violation(
+                    SCHEDULER, cls,
+                    f"effect `{cls.name}` has no isinstance branch in "
+                    "Server._apply — the shell would silently drop it on "
+                    "both the primary and backup paths"))
+        return out
+
+    # ------------------------------------------------------------------
+    # MsgType members: produced AND consumed
+    # ------------------------------------------------------------------
+    def _msgtype_members(self, project: Project) -> set[str] | None:
+        tree = project.tree(MESSAGES)
+        if tree is None:
+            return None
+        enum_cls = _find_class(tree, "MsgType")
+        if enum_cls is None:
+            return None
+        members: set[str] = set()
+        for node in enum_cls.body:
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        members.add(tgt.id)
+        return members
+
+    def _check_msgtypes(self, project: Project) -> list[Violation]:
+        members = self._msgtype_members(project)
+        if members is None:
+            return []
+        produced: dict[str, tuple[str, int]] = {}
+        consumed: dict[str, tuple[str, int]] = {}
+        out: list[Violation] = []
+        for path in project.glob(CORE_GLOB):
+            tree = project.tree(path)
+            if tree is None or path == MESSAGES:
+                continue
+            refs = self._classify_refs(tree)
+            for member, line, kind in refs:
+                if member not in members:
+                    out.append(self.violation(
+                        path, line,
+                        f"reference to undefined member MsgType.{member}"))
+                    continue
+                bucket = produced if kind == "produced" else consumed
+                bucket.setdefault(member, (path, line))
+        for member in sorted(produced.keys() - consumed.keys()):
+            path, line = produced[member]
+            out.append(self.violation(
+                path, line,
+                f"MsgType.{member} is constructed here but consumed "
+                f"nowhere (no `== MsgType.{member}` comparison or "
+                "dispatch-container entry on the primary/backup/client "
+                "loops)"))
+        for member in sorted(consumed.keys() - produced.keys()):
+            path, line = consumed[member]
+            out.append(self.violation(
+                path, line,
+                f"MsgType.{member} is consumed here but constructed "
+                "nowhere — dead protocol arm"))
+        return out
+
+    def _classify_refs(self, tree: ast.AST) -> list[tuple[str, int, str]]:
+        """(member, line, 'produced'|'consumed') for every MsgType.X whose
+        syntactic role is recognizable.  Call arguments are producers
+        (message construction/send helpers); comparison operands and
+        container-literal elements are consumers (dispatch)."""
+        refs: list[tuple[str, int, str]] = []
+
+        def is_msgtype_ref(node: ast.expr) -> str | None:
+            if isinstance(node, ast.Attribute) \
+                    and isinstance(node.value, ast.Name) \
+                    and node.value.id == "MsgType":
+                return node.attr
+            return None
+
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                for arg in node.args:
+                    member = is_msgtype_ref(arg)
+                    if member is not None:
+                        refs.append((member, arg.lineno, "produced"))
+                for kw in node.keywords:
+                    member = is_msgtype_ref(kw.value)
+                    if member is not None:
+                        refs.append((member, kw.value.lineno, "produced"))
+            elif isinstance(node, ast.Compare):
+                for operand in [node.left, *node.comparators]:
+                    member = is_msgtype_ref(operand)
+                    if member is not None:
+                        refs.append((member, operand.lineno, "consumed"))
+            elif isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+                for elt in node.elts:
+                    member = is_msgtype_ref(elt)
+                    if member is not None:
+                        refs.append((member, elt.lineno, "consumed"))
+            elif isinstance(node, ast.Dict):
+                for key in node.keys:
+                    if key is None:
+                        continue
+                    member = is_msgtype_ref(key)
+                    if member is not None:
+                        refs.append((member, key.lineno, "consumed"))
+        return refs

@@ -1,0 +1,155 @@
+"""core-purity: the replay-critical core must stay deterministic.
+
+``SchedulerCore`` owes its fault-tolerance guarantees to one property:
+the same event stream always produces the same effect stream and the
+same ``snapshot()``.  Anything that smuggles ambient state into an event
+handler — wall-clock reads, unseeded randomness, environment variables,
+thread scheduling — silently breaks byte-identical snapshot -> restore ->
+replay, the exact failure mode backup takeover cannot tolerate.
+
+Scope (two tiers):
+
+  * **strict** (``core/scheduler.py``, ``core/hardness.py``): pure state
+    machines — additionally no file I/O, ``print`` or console input.
+  * **determinism** (``core/trace.py``, ``core/sim.py``): the simulator
+    and trace layer may perform explicit, caller-requested persistence
+    (``Trace.write``/``load``) but must draw every nondeterministic
+    quantity from a *seeded* RNG — ``random.Random(seed)`` is the one
+    sanctioned constructor; module-level ``random.*`` calls and
+    ``random.Random()`` with no seed are banned alongside the clock,
+    environment and threading bans.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.framework import Project, Rule, Violation
+
+STRICT_FILES = (
+    "src/repro/core/scheduler.py",
+    "src/repro/core/hardness.py",
+)
+DETERMINISM_FILES = (
+    "src/repro/core/trace.py",
+    "src/repro/core/sim.py",
+)
+
+# module.attr calls that read ambient nondeterministic state
+_BANNED_MODULE_CALLS = {
+    "time": "wall-clock read (time must arrive as event payload)",
+    "datetime": "wall-clock read (datetime must arrive as event payload)",
+    "uuid": "nondeterministic identifier (derive names from core counters)",
+    "secrets": "nondeterministic randomness",
+}
+_BANNED_OS_ATTRS = {
+    "environ": "environment read (pass config through ServerConfig)",
+    "getenv": "environment read (pass config through ServerConfig)",
+    "urandom": "nondeterministic randomness",
+}
+_BANNED_IMPORTS = {
+    "threading": "thread scheduling is nondeterministic",
+    "multiprocessing": "process scheduling is nondeterministic",
+    "asyncio": "event-loop scheduling is nondeterministic",
+    "socket": "network I/O in the pure core",
+    "subprocess": "process I/O in the pure core",
+}
+_BANNED_BUILTIN_CALLS = {
+    "open": "file I/O in the pure core (persist via the shell)",
+    "print": "console I/O in the pure core (use EventLog)",
+    "input": "console input in the pure core",
+}
+
+
+def _root_name(node: ast.expr) -> str | None:
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+class CorePurityRule(Rule):
+    name = "core-purity"
+    description = ("replay-critical core files must not read the clock, "
+                   "unseeded RNGs, the environment, or perform I/O")
+
+    def check(self, project: Project) -> list[Violation]:
+        out: list[Violation] = []
+        for path in STRICT_FILES + DETERMINISM_FILES:
+            tree = project.tree(path)
+            if tree is None:
+                continue
+            out.extend(self._check_file(path, tree, path in STRICT_FILES))
+        return out
+
+    def _check_file(self, path: str, tree: ast.AST,
+                    strict: bool) -> list[Violation]:
+        out: list[Violation] = []
+        call_lines: set[int] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.Import, ast.ImportFrom)):
+                out.extend(self._check_import(path, node))
+            elif isinstance(node, ast.Call):
+                found = self._check_call(path, node, strict)
+                call_lines.update(v.line for v in found)
+                out.extend(found)
+        # os.environ reads that are not calls (`os.environ["X"]`, aliasing)
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Attribute) and node.attr == "environ" \
+                    and isinstance(node.value, ast.Name) \
+                    and node.value.id == "os" \
+                    and node.lineno not in call_lines:
+                out.append(self.violation(
+                    path, node,
+                    "read of `os.environ`: environment read "
+                    "(pass config through ServerConfig)"))
+        return out
+
+    def _check_import(self, path: str, node: ast.stmt) -> list[Violation]:
+        if isinstance(node, ast.Import):
+            names = [a.name for a in node.names]
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            names = [node.module]
+        else:
+            return []
+        out = []
+        for name in names:
+            top = name.split(".")[0]
+            if top in _BANNED_IMPORTS:
+                out.append(self.violation(
+                    path, node,
+                    f"import of `{name}`: {_BANNED_IMPORTS[top]}"))
+        return out
+
+    def _check_call(self, path: str, node: ast.Call,
+                    strict: bool) -> list[Violation]:
+        func = node.func
+        # builtin I/O calls (strict tier only)
+        if strict and isinstance(func, ast.Name) \
+                and func.id in _BANNED_BUILTIN_CALLS:
+            return [self.violation(
+                path, node,
+                f"call to `{func.id}(...)`: "
+                f"{_BANNED_BUILTIN_CALLS[func.id]}")]
+        if not isinstance(func, ast.Attribute):
+            return []
+        root = _root_name(func)
+        if root in _BANNED_MODULE_CALLS:
+            return [self.violation(
+                path, node,
+                f"call to `{root}.{func.attr}(...)`: "
+                f"{_BANNED_MODULE_CALLS[root]}")]
+        if root == "os" and func.attr in _BANNED_OS_ATTRS:
+            return [self.violation(
+                path, node,
+                f"call to `os.{func.attr}(...)`: "
+                f"{_BANNED_OS_ATTRS[func.attr]}")]
+        if root == "random":
+            # random.Random(seed) is the sanctioned seeded constructor;
+            # everything else on the module-level (shared, unseeded) RNG
+            # is nondeterministic under replay
+            if func.attr == "Random" and (node.args or node.keywords):
+                return []
+            return [self.violation(
+                path, node,
+                f"call to `random.{func.attr}(...)`: unseeded/module-level "
+                "RNG (use a random.Random(seed) instance)")]
+        return []

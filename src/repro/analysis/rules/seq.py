@@ -1,0 +1,202 @@
+"""seq-discipline: broadcasts ride ctrl_seq, never per-client srv_seq.
+
+The PR-4 divergence bug: STOP/RESUME broadcasts consumed one ``srv_seq``
+per client on the primary, but the backup (which only sees a single
+BROADCAST notice, not per-client FORWARDs) did not mirror that
+consumption — after takeover every client's dedup counter disagreed.
+The fix gave control broadcasts their own control-plane counter
+(``ctrl_seq``).  This rule regression-proofs the discipline:
+
+  1. a ``Send`` effect must never carry *both* ``srv_seq`` and
+     ``ctrl_seq`` (one message, one counter plane),
+  2. in ``core/scheduler.py``, a send constructed inside an iteration
+     over ``self.clients`` in any method **other than** ``on_message``
+     is a broadcast and must pass ``ctrl_seq`` (and must not use the
+     ``self._send`` helper, which consumes ``srv_seq``).  ``on_message``
+     is exempt: its fan-outs (e.g. APPLY_DOMINO_EFFECT) replay on the
+     backup through the FORWARDed client message, so per-client srv_seq
+     consumption is mirrored exactly,
+  3. ``MsgType.STOP``/``MsgType.RESUME`` must never flow through
+     ``self._send`` or a ``srv_seq=``-carrying constructor anywhere in
+     the core — they are control-plane by definition.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.framework import Project, Rule, Violation
+
+SCHEDULER = "src/repro/core/scheduler.py"
+CORE_GLOB = "src/repro/core/*.py"
+
+# methods whose sends replicate via FORWARDed client messages (the backup
+# replays the same event, so per-client srv_seq consumption is mirrored)
+_REPLICATED_HANDLERS = {"on_message"}
+_CONTROL_MEMBERS = {"STOP", "RESUME"}
+
+
+def _is_clients_iter(node: ast.expr) -> bool:
+    """Matches `self.clients`, `self.clients.values()`,
+    `self.clients.items()`, `list(self.clients...)`."""
+    if isinstance(node, ast.Call):
+        func = node.func
+        if isinstance(func, ast.Name) and func.id in ("list", "sorted") \
+                and node.args:
+            return _is_clients_iter(node.args[0])
+        if isinstance(func, ast.Attribute) \
+                and func.attr in ("values", "items", "keys"):
+            return _is_clients_iter(func.value)
+        return False
+    return (isinstance(node, ast.Attribute) and node.attr == "clients"
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self")
+
+
+def _kw(call: ast.Call, name: str) -> ast.keyword | None:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw
+    return None
+
+
+def _is_passthrough(call: ast.Call) -> bool:
+    """True when srv_seq/ctrl_seq are both forwarded verbatim from the
+    same source object (`srv_seq=eff.srv_seq, ctrl_seq=eff.ctrl_seq`) —
+    the transport shell copying an effect onto the wire, where exactly
+    one field is non-None, not the core allocating both counters."""
+    bases = []
+    for name in ("srv_seq", "ctrl_seq"):
+        kw = _kw(call, name)
+        if kw is None or not isinstance(kw.value, ast.Attribute) \
+                or kw.value.attr != name \
+                or not isinstance(kw.value.value, ast.Name):
+            return False
+        bases.append(kw.value.value.id)
+    return bases[0] == bases[1] and bases[0] != "self"
+
+
+def _call_name(call: ast.Call) -> str | None:
+    func = call.func
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return None
+
+
+def _is_control_member(node: ast.expr) -> bool:
+    return (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "MsgType"
+            and node.attr in _CONTROL_MEMBERS)
+
+
+class SeqDisciplineRule(Rule):
+    name = "seq-discipline"
+    description = ("broadcasts must ride the control-plane ctrl_seq "
+                   "counter, never per-client srv_seq")
+
+    def check(self, project: Project) -> list[Violation]:
+        out: list[Violation] = []
+        for path in project.glob(CORE_GLOB):
+            tree = project.tree(path)
+            if tree is None:
+                continue
+            out.extend(self._check_mixed_planes(path, tree))
+            out.extend(self._check_control_members(path, tree))
+        sched = project.tree(SCHEDULER)
+        if sched is not None:
+            out.extend(self._check_broadcast_loops(sched))
+        return out
+
+    # ------------------------------------------------------------------
+    def _check_mixed_planes(self, path: str,
+                            tree: ast.AST) -> list[Violation]:
+        out = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) \
+                    and _call_name(node) in ("Send", "Message") \
+                    and _kw(node, "srv_seq") is not None \
+                    and _kw(node, "ctrl_seq") is not None \
+                    and not _is_passthrough(node):
+                out.append(self.violation(
+                    path, node,
+                    f"{_call_name(node)}(...) carries both srv_seq and "
+                    "ctrl_seq — one message, one counter plane"))
+        return out
+
+    def _check_control_members(self, path: str,
+                               tree: ast.AST) -> list[Violation]:
+        out = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            has_control = any(_is_control_member(a) for a in node.args) \
+                or any(_is_control_member(kw.value) for kw in node.keywords)
+            if not has_control:
+                continue
+            if _call_name(node) == "_send":
+                out.append(self.violation(
+                    path, node,
+                    "STOP/RESUME sent through the srv_seq-consuming "
+                    "`_send` helper — control broadcasts must go through "
+                    "control_broadcast() so the backup's mirror stays in "
+                    "agreement"))
+            elif _kw(node, "srv_seq") is not None:
+                out.append(self.violation(
+                    path, node,
+                    "STOP/RESUME constructed with srv_seq — control "
+                    "broadcasts ride ctrl_seq"))
+        return out
+
+    # ------------------------------------------------------------------
+    def _check_broadcast_loops(self, tree: ast.AST) -> list[Violation]:
+        out: list[Violation] = []
+        core = None
+        for node in ast.iter_child_nodes(tree):
+            if isinstance(node, ast.ClassDef) and node.name == "SchedulerCore":
+                core = node
+        if core is None:
+            return out
+        for method in core.body:
+            if not isinstance(method, ast.FunctionDef) \
+                    or method.name in _REPLICATED_HANDLERS:
+                continue
+            for loop_body in self._clients_loop_bodies(method):
+                for node in loop_body:
+                    for call in [n for n in ast.walk(node)
+                                 if isinstance(n, ast.Call)]:
+                        out.extend(self._check_loop_send(method, call))
+        return out
+
+    def _clients_loop_bodies(self, method: ast.FunctionDef) -> list[list]:
+        """Bodies of for-loops and comprehension elements iterating over
+        self.clients inside ``method``."""
+        bodies: list[list] = []
+        for node in ast.walk(method):
+            if isinstance(node, ast.For) and _is_clients_iter(node.iter):
+                bodies.append(node.body)
+            elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                   ast.GeneratorExp)):
+                if any(_is_clients_iter(gen.iter)
+                       for gen in node.generators):
+                    bodies.append([node.elt])
+        return bodies
+
+    def _check_loop_send(self, method: ast.FunctionDef,
+                         call: ast.Call) -> list[Violation]:
+        name = _call_name(call)
+        if name == "_send":
+            return [self.violation(
+                SCHEDULER, call,
+                f"`self._send` inside a loop over self.clients in "
+                f"`{method.name}` — this is a broadcast consuming one "
+                "srv_seq per client, which the backup cannot mirror; use "
+                "control_broadcast()/ctrl_seq")]
+        if name == "Send" and _kw(call, "ctrl_seq") is None:
+            return [self.violation(
+                SCHEDULER, call,
+                f"Send(...) constructed per-client in `{method.name}` "
+                "without ctrl_seq — broadcasts must ride the "
+                "control-plane counter")]
+        return []

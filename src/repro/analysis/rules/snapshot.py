@@ -1,0 +1,149 @@
+"""snapshot-completeness: every mutable core field survives takeover.
+
+Backup takeover restores ``SchedulerCore`` from ``snapshot()`` and
+replays the forwarded stream into it.  A field assigned in ``__init__``
+but missing from ``snapshot()``/``restore()`` silently resets on the
+backup — the exact divergence class behind the srv_seq bug (PR 4): both
+sides keep running, their states drift, and the first takeover
+double-assigns or loses work.
+
+The rule cross-references three sites in ``core/scheduler.py``:
+
+  * attributes assigned on ``self`` directly in ``SchedulerCore.__init__``
+    (derived state built by ``_build_policies`` is excluded because it is
+    deterministically rebuilt from config on both paths),
+  * string keys of the dict literal returned by ``snapshot()``,
+  * attributes assigned in ``restore()``.
+
+A leading-underscore attribute matches a key with the underscore
+stripped (``_task_started`` <-> ``"task_started"``).  Both directions are
+checked: an ``__init__`` field missing from either site, and a snapshot
+key with no backing field (stale after a refactor).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.framework import Project, Rule, Violation
+
+SCHEDULER = "src/repro/core/scheduler.py"
+
+
+def _find_class(tree: ast.AST, name: str) -> ast.ClassDef | None:
+    for node in ast.iter_child_nodes(tree):
+        if isinstance(node, ast.ClassDef) and node.name == name:
+            return node
+    return None
+
+
+def _find_method(cls: ast.ClassDef, name: str) -> ast.FunctionDef | None:
+    for node in cls.body:
+        if isinstance(node, ast.FunctionDef) and node.name == name:
+            return node
+    return None
+
+
+def _self_assigns(func: ast.FunctionDef) -> dict[str, int]:
+    """attr -> first assignment line for `self.attr = ...` (plain,
+    annotated and augmented assignments)."""
+    out: dict[str, int] = {}
+    for node in ast.walk(func):
+        targets: list[ast.expr] = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+            targets = [node.target]
+        for tgt in targets:
+            if isinstance(tgt, ast.Attribute) \
+                    and isinstance(tgt.value, ast.Name) \
+                    and tgt.value.id == "self":
+                out.setdefault(tgt.attr, tgt.lineno)
+    return out
+
+
+def _restore_assigns(func: ast.FunctionDef) -> set[str]:
+    """Attributes assigned on any local object in restore()
+    (``core.attr = ...``)."""
+    out: set[str] = set()
+    for node in ast.walk(func):
+        targets: list[ast.expr] = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+            targets = [node.target]
+        for tgt in targets:
+            if isinstance(tgt, ast.Attribute) \
+                    and isinstance(tgt.value, ast.Name):
+                out.add(tgt.attr)
+    return out
+
+
+def _snapshot_keys(func: ast.FunctionDef) -> dict[str, int] | None:
+    """Constant string keys of the dict literal snapshot() returns."""
+    for node in ast.walk(func):
+        if isinstance(node, ast.Return) and isinstance(node.value, ast.Dict):
+            out: dict[str, int] = {}
+            for key in node.value.keys:
+                if isinstance(key, ast.Constant) and isinstance(key.value,
+                                                                str):
+                    out[key.value] = key.lineno
+            return out
+    return None
+
+
+class SnapshotCompletenessRule(Rule):
+    name = "snapshot-completeness"
+    description = ("every SchedulerCore.__init__ field must appear in "
+                   "snapshot() and be reassigned in restore()")
+
+    def check(self, project: Project) -> list[Violation]:
+        tree = project.tree(SCHEDULER)
+        if tree is None:
+            return []
+        core = _find_class(tree, "SchedulerCore")
+        if core is None:
+            return []
+        init = _find_method(core, "__init__")
+        snapshot = _find_method(core, "snapshot")
+        restore = _find_method(core, "restore")
+        out: list[Violation] = []
+        if init is None or snapshot is None or restore is None:
+            out.append(self.violation(
+                SCHEDULER, core,
+                "SchedulerCore must define __init__, snapshot() and "
+                "restore() — takeover depends on all three"))
+            return out
+        keys = _snapshot_keys(snapshot)
+        if keys is None:
+            out.append(self.violation(
+                SCHEDULER, snapshot,
+                "snapshot() must return a dict literal with constant "
+                "string keys so completeness is statically checkable"))
+            return out
+        fields = _self_assigns(init)
+        restored = _restore_assigns(restore)
+        # fields that __init__ builds via helper calls rather than direct
+        # self-assignments are invisible here by design (_build_policies
+        # rebuilds derived policy objects from config on both paths)
+        for attr, line in sorted(fields.items()):
+            key = attr.lstrip("_")
+            if attr not in keys and key not in keys:
+                out.append(self.violation(
+                    SCHEDULER, line,
+                    f"core field `self.{attr}` is not captured by "
+                    "snapshot() — it silently resets on backup "
+                    "restore/takeover"))
+            if attr not in restored:
+                out.append(self.violation(
+                    SCHEDULER, line,
+                    f"core field `self.{attr}` is not reassigned in "
+                    "restore() — restored cores would lack it"))
+        field_keys = {a.lstrip("_") for a in fields} | set(fields)
+        for key, line in sorted(keys.items()):
+            if key not in field_keys:
+                out.append(self.violation(
+                    SCHEDULER, line,
+                    f"snapshot() key \"{key}\" has no matching "
+                    "SchedulerCore.__init__ field — stale after a "
+                    "refactor?"))
+        return out

@@ -13,6 +13,7 @@ Layout:  <dir>/step_<N>/arrays.npz + meta.json   (tmp-dir + rename = atomic)
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import shutil
@@ -73,10 +74,8 @@ def available_steps(directory: str) -> list[int]:
     steps = []
     for name in os.listdir(directory):
         if name.startswith("step_"):
-            try:
+            with contextlib.suppress(ValueError):
                 steps.append(int(name.split("_", 1)[1]))
-            except ValueError:
-                pass
     return sorted(steps)
 
 
@@ -105,10 +104,9 @@ def restore(directory: str, like, *, step: int | None = None,
         if dtype_map.get(key) == "bfloat16":
             arr = arr.view(ml_dtypes.bfloat16)
         arr = arr.astype(leaf.dtype)
-        if key in sh and sh[key] is not None:
-            out[key] = jax.device_put(arr, sh[key])
-        else:
-            out[key] = jax.device_put(arr)
+        out[key] = (jax.device_put(arr, sh[key])
+                    if key in sh and sh[key] is not None
+                    else jax.device_put(arr))
     restored = jax.tree_util.tree_unflatten(
         treedef, [out[k] for k in flat_paths])
     return restored, step, meta

@@ -173,10 +173,9 @@ def kv_cache_bytes(cfg: ModelConfig, shape: ShapeConfig, dtype_bytes: int = 2) -
     total = 0
     for mixer, _ in _layer_kinds(cfg):
         if mixer == "attn":
-            if cfg.attention_kind == "mla":
-                per_tok = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
-            else:
-                per_tok = 2 * cfg.num_kv_heads * cfg.head_dim
+            per_tok = (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+                       if cfg.attention_kind == "mla"
+                       else 2 * cfg.num_kv_heads * cfg.head_dim)
             total += b * s * per_tok * dtype_bytes
         elif mixer == "mamba":
             ssm = cfg.ssm

@@ -133,5 +133,5 @@ class ModelConfig:
         """True if the arch has a long-context (500k) path: SSM or hybrid."""
         return self.family in ("ssm", "hybrid")
 
-    def replace(self, **kw) -> "ModelConfig":
+    def replace(self, **kw) -> ModelConfig:
         return dataclasses.replace(self, **kw)

@@ -115,7 +115,7 @@ class Client:
                                      {"event": "timeout", "tid": tid})
 
         # 2b. re-send unacknowledged reports (lost to a partition)
-        for seq, entry in list(self._outbox.items()):
+        for _seq, entry in list(self._outbox.items()):
             msg, t_sent = entry
             if now - t_sent > self.request_retry:
                 self.primary.send(msg)

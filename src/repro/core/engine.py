@@ -15,6 +15,7 @@ Engines shipped:
 """
 from __future__ import annotations
 
+import contextlib
 import multiprocessing as mp
 import os
 import shutil
@@ -117,10 +118,8 @@ def _client_process_main(name, primary_send, primary_recv, handshake_q,
 
     # own process group: the engine can reap this client *and* the worker
     # processes it spawned with one killpg, even after a hard error path
-    try:
+    with contextlib.suppress(OSError):
         os.setpgrp()
-    except OSError:
-        pass
     chan = transport.MPChannel(primary_send, primary_recv)
     hs = transport.MPChannel(handshake_q, handshake_q)
     client = Client(name, chan, backup_channel=None,

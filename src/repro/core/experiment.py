@@ -294,11 +294,11 @@ class Experiment:
         return tasks
 
     # ------------------------------------------------------------------
-    def run(self) -> "RunHandle":
+    def run(self) -> RunHandle:
         """Start (lazily) and return the streaming run handle."""
         return RunHandle(self)
 
-    def resume(self, snapshot: bytes) -> "RunHandle":
+    def resume(self, snapshot: bytes) -> RunHandle:
         """Resume from a ``RunHandle.snapshot()`` blob: solved results are
         kept, in-flight assignments are requeued (at-least-once), and the
         run continues on a fresh fleet."""
@@ -345,12 +345,10 @@ class RunHandle:
                 _apply_chaos(self._cluster, exp.chaos)
             elif isinstance(spec, AbstractEngine):
                 self._engine = spec
-                if self._resume_blob is not None:
-                    self._server = Server.resume_primary(self._resume_blob,
-                                                         spec)
-                else:
-                    self._server = Server(exp.tasks, spec, exp.config,
-                                          _internal=True)
+                self._server = (
+                    Server.resume_primary(self._resume_blob, spec)
+                    if self._resume_blob is not None
+                    else Server(exp.tasks, spec, exp.config, _internal=True))
             else:
                 raise TypeError(f"engine factory returned {spec!r}; "
                                 f"expected an AbstractEngine or "
@@ -497,7 +495,7 @@ class RunHandle:
         self._closed = True
         self._engine.shutdown()
 
-    def __enter__(self) -> "RunHandle":
+    def __enter__(self) -> RunHandle:
         self._start()
         return self
 

@@ -19,7 +19,7 @@ from dataclasses import dataclass
 class Hardness:
     values: tuple
 
-    def geq(self, other: "Hardness") -> bool:
+    def geq(self, other: Hardness) -> bool:
         """self as hard or harder than other (componentwise >=).
 
         Raises ValueError on arity mismatch — an ``assert`` would vanish
@@ -28,7 +28,8 @@ class Hardness:
             raise ValueError(
                 f"incomparable hardness arities: {len(self.values)} "
                 f"vs {len(other.values)}")
-        return all(a >= b for a, b in zip(self.values, other.values))
+        return all(a >= b
+                   for a, b in zip(self.values, other.values, strict=True))
 
     def __le__(self, other):
         return other.geq(self)

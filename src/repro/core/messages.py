@@ -4,6 +4,7 @@ from __future__ import annotations
 import enum
 import itertools
 from dataclasses import dataclass, field
+from typing import Any
 
 
 class MsgType(enum.Enum):
@@ -41,7 +42,9 @@ _seq = itertools.count()
 class Message:
     type: MsgType
     sender: str
-    body: object = None
+    # payload shape varies per MsgType (dict for task grants, tuple for
+    # results, bytes for snapshots) — handlers narrow it at the use site
+    body: Any = None
     seq: int = field(default_factory=lambda: next(_seq))
     # server->client messages carry a per-client logical counter so clients
     # can dedup the primary's message against the backup's mirror of it

@@ -53,7 +53,7 @@ class ResultsTable:
     @classmethod
     def build(cls, tasks, original_index, status, results,
               min_group_size: int = 0, task_costs: dict | None = None,
-              cost: dict | None = None) -> "ResultsTable":
+              cost: dict | None = None) -> ResultsTable:
         if not tasks:
             return cls((), (), [], cost=cost)
         # group retention: a group is kept if #solved >= min_group_size
@@ -63,7 +63,7 @@ class ResultsTable:
                 solved_per_group[task.group_key()] += 1
         dropped = set()
         if min_group_size > 0:
-            for tid, task in enumerate(tasks):
+            for task in tasks:
                 gk = task.group_key()
                 if solved_per_group[gk] < min_group_size:
                     dropped.add(gk)

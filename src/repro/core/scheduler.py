@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import collections
 from dataclasses import dataclass, field
+from typing import Any
 
 from repro.core import policy as _policy
 from repro.core.hardness import Hardness, MinHardSet
@@ -73,7 +74,7 @@ class ClientInfo:
     which is deliberately excluded from snapshots."""
 
     name: str
-    endpoint: object
+    endpoint: Any
     last_health: float
     srv_seq: int = 0                    # per-client logical send counter
     last_client_seq: int = -1           # highest processed client msg seq
@@ -152,7 +153,7 @@ class Tick:
 class Send:
     client: str
     mtype: MsgType
-    body: object = None
+    body: Any = None
     srv_seq: int | None = None          # per-client counter (normal sends)
     ctrl_seq: int | None = None         # control-plane counter (broadcasts)
 
@@ -254,12 +255,10 @@ class SchedulerCore:
     def has_assignable(self) -> bool:
         if any(self.status[t] == FAILED_POOL for t in self.tasks_from_failed):
             return True
-        for tid in range(self.next_ptr, len(self.tasks)):
-            if self.status[tid] == PENDING \
-                    and not self.min_hard.disqualifies(
-                        self.tasks[tid].hardness()):
-                return True
-        return False
+        return any(
+            self.status[tid] == PENDING
+            and not self.min_hard.disqualifies(self.tasks[tid].hardness())
+            for tid in range(self.next_ptr, len(self.tasks)))
 
     def count_assignable(self, bound: int) -> int:
         """Number of currently grantable tasks, counted up to ``bound``
@@ -580,7 +579,7 @@ class SchedulerCore:
         }
 
     @classmethod
-    def restore(cls, snap: dict) -> "SchedulerCore":
+    def restore(cls, snap: dict) -> SchedulerCore:
         core = cls.__new__(cls)
         core.config = snap["config"]
         core.tasks = snap["tasks"]

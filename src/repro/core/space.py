@@ -105,7 +105,7 @@ def _as_axis(spec) -> Axis:
 class ParamSpace:
     """An ordered set of named axes; iterating yields cells (dicts)."""
 
-    def __init__(self, axes: dict, factory: "TaskFactory | None" = None):
+    def __init__(self, axes: dict, factory: TaskFactory | None = None):
         if not axes:
             raise ValueError("ParamSpace needs at least one axis")
         self.axes: dict[str, Axis] = {n: _as_axis(a) for n, a in axes.items()}
@@ -113,7 +113,7 @@ class ParamSpace:
         self._expanded: list[dict] | None = None   # cells() cache
 
     @classmethod
-    def grid(cls, **axes) -> "ParamSpace":
+    def grid(cls, **axes) -> ParamSpace:
         """Build a space from keyword axes; declaration order is the
         nesting order (first axis is the outermost loop) and the
         parameter-title order of the generated tasks."""
@@ -166,7 +166,7 @@ class ParamSpace:
         return tuple(out)
 
     # ------------------------------------------------------------------
-    def bind(self, factory) -> "ParamSpace":
+    def bind(self, factory) -> ParamSpace:
         """Attach a ``@task``-decorated function (or plain callable) the
         cells will be run through; returns a new bound space."""
         if not isinstance(factory, TaskFactory):

@@ -11,6 +11,7 @@ so a timeout on one cell domino-prunes every cell that dominates it
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import signal
@@ -112,10 +113,8 @@ class DryRunCellTask(AbstractTask):
                                 stderr=subprocess.STDOUT, text=True)
 
         def _kill(*_):
-            try:
+            with contextlib.suppress(ProcessLookupError):
                 os.killpg(proc.pid, signal.SIGKILL)
-            except ProcessLookupError:
-                pass
             sys.exit(1)
 
         signal.signal(signal.SIGTERM, _kill)

@@ -53,4 +53,5 @@ class AbstractTask:
         titles = self.parameter_titles()
         params = self.parameters()
         gset = set(self.group_parameter_titles())
-        return tuple(v for t, v in zip(titles, params) if t in gset)
+        return tuple(
+            v for t, v in zip(titles, params, strict=False) if t in gset)

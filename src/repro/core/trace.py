@@ -61,7 +61,7 @@ class Trace:
             f.write(self.to_json() + "\n")
 
     @classmethod
-    def from_dict(cls, d: dict) -> "Trace":
+    def from_dict(cls, d: dict) -> Trace:
         return cls(
             message_delays={k: list(v)
                             for k, v in d.get("message_delays", {}).items()},
@@ -72,7 +72,7 @@ class Trace:
         )
 
     @classmethod
-    def load(cls, path: str) -> "Trace":
+    def load(cls, path: str) -> Trace:
         with open(path) as f:
             return cls.from_dict(json.load(f))
 

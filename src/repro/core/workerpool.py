@@ -136,7 +136,7 @@ class SimWorkerPool:
                   for tid in self._pending_started]
         self._pending_started.clear()
         now = self._clock.now()
-        for tid, (task, t0, t_end) in list(self._running.items()):
+        for tid, (task, _t0, t_end) in list(self._running.items()):
             if now >= t_end:
                 del self._running[tid]
                 try:

@@ -38,10 +38,9 @@ def batch_at(cfg: DataConfig, step: int) -> dict:
     stride = rng.integers(1, 7, size=shape[:1] + shape[2:])
     noise = (rng.random(shape) < 0.05) * rng.integers(0, V, size=shape)
     t = np.arange(S)
-    if cfg.num_codebooks:
-        walk = (start[:, None, :] + stride[:, None, :] * t[None, :, None]) % V
-    else:
-        walk = (start[:, None] + stride[:, None] * t[None, :]) % V
+    walk = ((start[:, None, :] + stride[:, None, :] * t[None, :, None]) % V
+            if cfg.num_codebooks
+            else (start[:, None] + stride[:, None] * t[None, :]) % V)
     tokens = np.where(noise > 0, noise, walk).astype(np.int32)
     batch = {"tokens": tokens}
     if cfg.num_image_tokens:

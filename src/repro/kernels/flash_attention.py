@@ -91,6 +91,7 @@ def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
     Bsz, Sq, H, D = q.shape
     Sk, K = k.shape[1], k.shape[2]
     Dv = v.shape[-1]
+    assert H % K == 0, (H, K)
     G = H // K
     scale = D ** -0.5 if scale is None else scale
     block_q = min(block_q, Sq)

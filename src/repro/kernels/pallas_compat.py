@@ -9,4 +9,4 @@ from __future__ import annotations
 from jax.experimental.pallas import tpu as pltpu
 
 CompilerParams = getattr(pltpu, "CompilerParams", None) \
-    or getattr(pltpu, "TPUCompilerParams")
+    or pltpu.TPUCompilerParams

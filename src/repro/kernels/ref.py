@@ -109,10 +109,8 @@ def ssd_chunked_ref(
 
     # --- inter-chunk recurrence over nc chunks ---
     chunk_decay = jnp.exp(dAc[:, :, -1, :])  # [B, nc, H]
-    if h0 is None:
-        h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
-    else:
-        h0 = jnp.swapaxes(h0.astype(jnp.float32), -1, -2)  # [B,H,P,N]->[B,H,N,P]
+    h0 = (jnp.zeros((Bsz, H, N, P), jnp.float32) if h0 is None
+          else jnp.swapaxes(h0.astype(jnp.float32), -1, -2))  # ->[B,H,N,P]
 
     def step(h, inp):
         dec, s = inp  # dec [B,H], s [B,H,N,P]

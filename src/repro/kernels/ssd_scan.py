@@ -33,10 +33,8 @@ def _kernel(x_ref, dt_ref, A_ref, b_ref, c_ref, h0_ref, y_ref, hT_ref,
 
     @pl.when(ic == 0)
     def _init():
-        if has_h0:
-            h_scr[...] = h0_ref[0, 0].astype(jnp.float32)
-        else:
-            h_scr[...] = jnp.zeros_like(h_scr)
+        h_scr[...] = (h0_ref[0, 0].astype(jnp.float32) if has_h0
+                      else jnp.zeros_like(h_scr))
 
     x = x_ref[0, :, 0, :].astype(jnp.float32)       # [L, P]
     dt = dt_ref[0, :, 0].astype(jnp.float32)        # [L]
@@ -83,6 +81,7 @@ def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 64, h0=None,
     Returns y [B,S,H,P] (and final state [B,H,P,N] fp32 if requested)."""
     Bsz, S, H, P = x.shape
     G, N = Bm.shape[2], Bm.shape[3]
+    assert H % G == 0, (H, G)
     rep = H // G
     chunk = min(chunk, S)
     assert S % chunk == 0, (S, chunk)

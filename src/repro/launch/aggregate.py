@@ -18,6 +18,7 @@ and the sharding-derived bytes/device.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import glob
 import json
 import os
@@ -40,7 +41,8 @@ def extrapolate_linear(base: dict, bumped: list[dict], base_counts: tuple,
             continue
         slopes = [b[m] - base[m] for b in bumped]
         val = base[m]
-        for s, c0, cf in zip(slopes, base_counts, full_counts):
+        for s, c0, cf in zip(slopes, base_counts, full_counts,
+                             strict=False):
             val += s * (cf - c0)
         out[m] = val
     return out
@@ -49,11 +51,9 @@ def extrapolate_linear(base: dict, bumped: list[dict], base_counts: tuple,
 def load_records(directory: str) -> dict:
     recs = {}
     for path in glob.glob(os.path.join(directory, "*.json")):
-        with open(path) as f:
-            try:
-                recs[os.path.basename(path)] = json.load(f)
-            except json.JSONDecodeError:
-                pass
+        with open(path) as f, \
+                contextlib.suppress(json.JSONDecodeError):
+            recs[os.path.basename(path)] = json.load(f)
     return recs
 
 

@@ -24,6 +24,7 @@ Variants (perf hillclimbing knobs; defaults = paper-faithful baseline):
     flash_block_q / flash_block_k (informational on CPU)
 """
 import argparse
+import contextlib
 import json
 import math
 import sys
@@ -50,11 +51,9 @@ def tree_local_bytes(tree) -> float:
             if leaf.shape else leaf.dtype.itemsize
         sh = getattr(leaf, "sharding", None)
         if sh is not None:
-            try:
+            with contextlib.suppress(Exception):
                 local = sh.shard_shape(leaf.shape)
                 nbytes = math.prod(local) * leaf.dtype.itemsize
-            except Exception:
-                pass
         total += nbytes
     return float(total)
 
@@ -100,10 +99,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                 "note": "full-attention arch at 500k (by design; DESIGN.md)"}
 
     t0 = time.time()
-    if mesh_shape is not None:
-        mesh = make_mesh(tuple(mesh_shape), tuple(mesh_axes))
-    else:
-        mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh = (make_mesh(tuple(mesh_shape), tuple(mesh_axes))
+            if mesh_shape is not None
+            else make_production_mesh(multi_pod=multi_pod))
     chips = math.prod(mesh.shape.values())
     mesh_desc = "x".join(f"{k}{v_}" for k, v_ in mesh.shape.items())
     rules = make_rules(mesh, seq_shard=bool(v["seq_shard"]))

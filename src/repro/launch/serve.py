@@ -37,13 +37,10 @@ def main(argv=None):
                        max_seq=args.max_seq, rng_seed=args.seed)
     rng = np.random.default_rng(args.seed)
     reqs = []
-    for i in range(args.requests):
+    for _ in range(args.requests):
         plen = int(rng.integers(2, 9))
-        if cfg.num_codebooks:
-            prompt = rng.integers(0, cfg.vocab_size,
-                                  (plen, cfg.num_codebooks)).astype(np.int32)
-        else:
-            prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+        shape = (plen, cfg.num_codebooks) if cfg.num_codebooks else plen
+        prompt = rng.integers(0, cfg.vocab_size, shape).astype(np.int32)
         reqs.append(Request(prompt=prompt, max_new_tokens=args.max_new,
                             temperature=args.temperature))
         eng.submit(reqs[-1])

@@ -154,7 +154,7 @@ class HybridPlan:
     group_sizes: dict
 
     @staticmethod
-    def build(cfg) -> "HybridPlan":
+    def build(cfg) -> HybridPlan:
         hb = cfg.hybrid_block
         assert hb and cfg.num_layers % hb == 0
         m = cfg.moe

@@ -34,10 +34,7 @@ def make_dense_ffn(cfg, width: int):
 
 def apply_dense_ffn(cfg, p, x):
     h = x @ p["wi"]
-    if "wg" in p:
-        h = jax.nn.silu(x @ p["wg"]) * h
-    else:
-        h = jax.nn.gelu(h)
+    h = jax.nn.silu(x @ p["wg"]) * h if "wg" in p else jax.nn.gelu(h)
     h = shard(h, "batch", None, "ffn")
     return h @ p["wo"]
 

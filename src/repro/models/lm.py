@@ -56,12 +56,11 @@ def segments(cfg) -> list[Segment]:
 def make_lm(cfg):
     d = cfg.d_model
     p: dict = {}
-    if cfg.num_codebooks:
-        p["embed"] = Param((cfg.num_codebooks, cfg.vocab_size, d),
-                           ("codebooks", "vocab", "embed"), init="normal",
-                           scale=0.02)
-    else:
-        p["embed"] = make_embedding(cfg.vocab_size, d)
+    p["embed"] = (Param((cfg.num_codebooks, cfg.vocab_size, d),
+                        ("codebooks", "vocab", "embed"), init="normal",
+                        scale=0.02)
+                  if cfg.num_codebooks
+                  else make_embedding(cfg.vocab_size, d))
     segs = []
     for seg in segments(cfg):
         if seg.kind == "hybrid":
@@ -73,13 +72,11 @@ def make_lm(cfg):
     p["segments"] = segs
     p["final_norm"] = make_norm(d)
     if not cfg.tie_embeddings:
-        if cfg.num_codebooks:
-            p["lm_head"] = Param((cfg.num_codebooks, d, cfg.vocab_size),
-                                 ("codebooks", "embed", "vocab"),
-                                 init="scaled")
-        else:
-            p["lm_head"] = Param((d, cfg.vocab_size), ("embed", "vocab"),
-                                 init="scaled")
+        p["lm_head"] = (Param((cfg.num_codebooks, d, cfg.vocab_size),
+                              ("codebooks", "embed", "vocab"), init="scaled")
+                        if cfg.num_codebooks
+                        else Param((d, cfg.vocab_size), ("embed", "vocab"),
+                                   init="scaled"))
     if cfg.mtp_depth:
         p["mtp"] = [
             {
@@ -168,7 +165,8 @@ def backbone(cfg, params, h, positions, *, remat: bool = True,
     """Returns (h, aux_loss, caches-per-segment or None)."""
     aux = jnp.zeros((), jnp.float32)
     caches = []
-    for seg, seg_params in zip(segments(cfg), params["segments"]):
+    for seg, seg_params in zip(segments(cfg), params["segments"],
+                               strict=False):
         h, a, c = _segment_scan(cfg, seg, seg_params, h, positions,
                                 remat=remat, collect=collect, unroll=unroll)
         aux = aux + a
@@ -301,16 +299,16 @@ def decode_step(cfg, params, batch, cache, *, unroll: bool = False):
     h = embed_tokens(cfg, params, tokens, batch)
     new_caches = []
     for seg, seg_params, seg_cache in zip(segments(cfg), params["segments"],
-                                          cache):
-        def body(carry, xs):
+                                          cache, strict=False):
+        def body(carry, xs, seg=seg):
             hh = carry
             layer_p, layer_c = xs
-            if seg.kind == "hybrid":
-                hh, nc = B.apply_super_block_decode(cfg, layer_p, hh, layer_c,
-                                                    pos, seg.plan, active)
-            else:
-                hh, nc = B.apply_block_decode(cfg, layer_p, hh, layer_c, pos,
-                                              seg.mixer, seg.ffn, active)
+            hh, nc = (B.apply_super_block_decode(cfg, layer_p, hh, layer_c,
+                                                 pos, seg.plan, active)
+                      if seg.kind == "hybrid"
+                      else B.apply_block_decode(cfg, layer_p, hh, layer_c,
+                                                pos, seg.mixer, seg.ffn,
+                                                active))
             return hh, nc
 
         h, new_c = jax.lax.scan(body, h, (seg_params, seg_cache),

@@ -78,10 +78,10 @@ class ShardingRules:
             if not phys:
                 out.append(None)
                 continue
-            if shape is not None:
-                if shape[i] % self.axis_size(phys) != 0:
-                    out.append(None)
-                    continue
+            if shape is not None \
+                    and shape[i] % self.axis_size(phys) != 0:
+                out.append(None)
+                continue
             out.append(phys[0] if len(phys) == 1 else phys)
         # PartitionSpec forbids repeating a mesh axis; guard against tables
         # that would double-use one (can happen with custom tables).

@@ -27,7 +27,7 @@ def zero1_spec(spec: PartitionSpec, shape, rules: ShardingRules) -> PartitionSpe
         return spec
     dp_size = math.prod(rules.mesh.shape[a] for a in dp)
     entries = list(spec) + [None] * (len(shape) - len(spec))
-    for i, (e, d) in enumerate(zip(entries, shape)):
+    for i, (e, d) in enumerate(zip(entries, shape, strict=False)):
         if e is None and d % dp_size == 0:
             entries[i] = dp if len(dp) > 1 else dp[0]
             return PartitionSpec(*entries)

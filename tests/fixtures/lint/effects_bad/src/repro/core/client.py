@@ -1,0 +1,8 @@
+from repro.core.messages import MsgType
+
+
+class Client:
+    def act(self, msg):
+        if msg.type == MsgType.PONG:
+            return "pong"
+        return None

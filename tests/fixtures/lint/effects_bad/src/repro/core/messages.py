@@ -1,0 +1,6 @@
+import enum
+
+
+class MsgType(enum.Enum):
+    PING = 1
+    PONG = 2

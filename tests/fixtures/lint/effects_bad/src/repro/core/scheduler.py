@@ -1,0 +1,36 @@
+"""Fixture: an unhandled event, an undispatched effect, a void message."""
+from dataclasses import dataclass
+
+from repro.core.messages import MsgType
+
+
+# ---- typed events (inputs) ----
+@dataclass
+class Tick:
+    now: float
+
+
+@dataclass
+class ClientLost:
+    name: str
+
+
+# ---- typed effects (outputs) ----
+@dataclass
+class Send:
+    client: str
+
+
+@dataclass
+class LaunchProbe:
+    target: str
+
+
+class SchedulerCore:
+    def handle(self, event):
+        if isinstance(event, Tick):
+            return [Send(client="a"), LaunchProbe(target="b")]
+        return []
+
+    def ping(self, ci):
+        self._send(ci, MsgType.PING)

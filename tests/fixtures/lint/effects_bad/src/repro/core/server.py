@@ -1,0 +1,7 @@
+from repro.core.scheduler import Send
+
+
+class Server:
+    def _apply(self, eff, now):
+        if isinstance(eff, Send):
+            pass

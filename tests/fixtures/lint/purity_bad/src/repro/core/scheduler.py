@@ -1,0 +1,14 @@
+"""Fixture: every purity ban at once — clock, env, RNG, I/O, threads."""
+import os
+import random
+import threading
+import time
+
+
+class SchedulerCore:
+    def on_tick(self):
+        now = time.time()
+        tag = os.environ["EXPO_TAG"]
+        jitter = random.random()
+        with open("/tmp/expo.log", "w") as fh:
+            fh.write(str((now, tag, jitter, threading.active_count())))

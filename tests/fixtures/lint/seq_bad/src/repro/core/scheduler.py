@@ -1,0 +1,23 @@
+"""Fixture: srv_seq broadcasts — the exact divergence class of PR 4."""
+from repro.core.messages import MsgType
+
+
+class SchedulerCore:
+    def __init__(self):
+        self.clients = {}
+        self.srv_seq = 0
+        self.ctrl_seq = 0
+
+    def _send(self, ci, mtype, body=None):
+        pass
+
+    def pause_all(self):
+        for ci in self.clients.values():
+            self._send(ci, MsgType.STOP)
+
+    def fan_out(self):
+        return [Send(client=name, srv_seq=self.srv_seq)
+                for name in self.clients]
+
+    def mixed_planes(self, ci):
+        return Send(client=ci.name, srv_seq=1, ctrl_seq=2)

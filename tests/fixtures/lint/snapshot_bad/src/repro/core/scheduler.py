@@ -1,0 +1,17 @@
+"""Fixture: a field snapshot() forgets, a key __init__ never assigns."""
+
+
+class SchedulerCore:
+    def __init__(self, config):
+        self.config = config
+        self.tasks = []
+        self._budget_hit = False
+
+    def snapshot(self):
+        return {"config": self.config, "stale_key": 0}
+
+    @classmethod
+    def restore(cls, snap):
+        core = cls(snap["config"])
+        core.tasks = []
+        return core

@@ -1,0 +1,7 @@
+# expolint: disable-file=core-purity
+"""Fixture: a whole file opted out via file-level suppression."""
+import time
+
+
+def measure():
+    return time.time()

@@ -1,0 +1,7 @@
+"""Fixture: a real violation silenced by a line suppression."""
+import time
+
+
+class SchedulerCore:
+    def on_tick(self):
+        return time.time()  # expolint: disable=core-purity

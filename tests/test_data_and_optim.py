@@ -29,7 +29,7 @@ def test_iterator_restore_reproduces_stream():
     it2 = SyntheticIterator(cfg)
     it2.restore(state)
     again = [next(it2)["tokens"] for _ in range(3)]
-    for a, b in zip(later, again):
+    for a, b in zip(later, again, strict=True):
         np.testing.assert_array_equal(a, b)
 
 
@@ -53,7 +53,7 @@ def test_optimizer_minimises_quadratic(opt):
     def loss_fn(p):
         return jnp.sum((p["w"] - target) ** 2)
 
-    for step in range(300):
+    for _ in range(300):
         g = jax.grad(loss_fn)(params)
         params, state = opt.update(g, state, params, lr=0.05)
     assert float(loss_fn(params)) < 1e-2

@@ -29,7 +29,8 @@ def test_dryrun_cell_small_mesh(arch, shape, tmp_path):
                     "--mesh-shape", "2", "4",
                     "--mesh-axes", "data", "model", "--json", out])
     assert r.returncode == 0, r.stdout[-2500:] + r.stderr[-2500:]
-    rec = json.load(open(out))
+    with open(out) as f:
+        rec = json.load(f)
     assert rec["status"] == "ok"
     roof = rec["roofline"]
     assert roof["hlo_flops"] > 0
@@ -44,7 +45,8 @@ def test_dryrun_inapplicable_cell(tmp_path):
                     "--mesh-shape", "2", "4",
                     "--mesh-axes", "data", "model", "--json", out])
     assert r.returncode == 0
-    rec = json.load(open(out))
+    with open(out) as f:
+        rec = json.load(f)
     assert rec["status"] == "inapplicable"
 
 
@@ -55,6 +57,7 @@ def test_dryrun_multipod_axes_small(tmp_path):
                     "--mesh-shape", "2", "2", "2",
                     "--mesh-axes", "pod", "data", "model", "--json", out])
     assert r.returncode == 0, r.stdout[-2500:] + r.stderr[-2500:]
-    rec = json.load(open(out))
+    with open(out) as f:
+        rec = json.load(f)
     assert rec["status"] == "ok"
     assert rec["mesh"] == "pod2xdata2xmodel2"

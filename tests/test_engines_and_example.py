@@ -157,15 +157,14 @@ def test_local_engine_context_manager_reaps_on_error_path():
     """An exception between create_instance and shutdown() must not leak
     the client process (group) — the with-block is the backstop."""
     engine = LocalEngine(n_workers_per_client=1)
-    with pytest.raises(RuntimeError, match="boom"):
-        with engine:
-            engine.create_instance("client", "c0")
-            proc = engine._procs["c0"]
-            for _ in range(100):
-                if proc.is_alive():
-                    break
-                time.sleep(0.05)
-            raise RuntimeError("boom")
+    with pytest.raises(RuntimeError, match="boom"), engine:
+        engine.create_instance("client", "c0")
+        proc = engine._procs["c0"]
+        for _ in range(100):
+            if proc.is_alive():
+                break
+            time.sleep(0.05)
+        raise RuntimeError("boom")
     deadline = time.time() + 10
     while proc.is_alive() and time.time() < deadline:
         time.sleep(0.05)

@@ -48,7 +48,7 @@ def test_domino_prunes_only_dominating_tasks():
                                  dur, 2.0, (a * b,)))
     cl = SimCluster(tasks, ServerConfig(max_clients=2, use_backup=False))
     srv = cl.run(until=600)
-    for p, r, s in srv.final_results.rows:
+    for p, _r, s in srv.final_results.rows:
         a, b, _ = p
         if a < 3 or b < 3:
             assert s == "done", (p, s)

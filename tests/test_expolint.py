@@ -1,0 +1,93 @@
+"""expolint: each rule catches its bad fixture, the live tree is clean,
+suppressions work, and the CLI speaks JSON with the right exit codes."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import run_checks
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "fixtures" / "lint"
+
+# (fixture dir, rule it must trip, fragment expected in some message)
+CASES = [
+    ("purity_bad", "core-purity", "wall-clock"),
+    ("effects_bad", "effect-exhaustiveness", "isinstance branch"),
+    ("snapshot_bad", "snapshot-completeness", "snapshot()"),
+    ("seq_bad", "seq-discipline", "srv_seq"),
+    ("pallas_bad", "pallas-rules", "divisibility"),
+]
+
+
+@pytest.mark.parametrize("case,rule,fragment", CASES)
+def test_rule_catches_bad_fixture(case, rule, fragment):
+    violations = run_checks(FIXTURES / case, rules=[rule])
+    assert violations, f"{rule} found nothing in fixture {case}"
+    assert all(v.rule == rule for v in violations)
+    assert any(fragment in v.message for v in violations), \
+        [v.message for v in violations]
+
+
+def test_purity_catches_every_ban_family():
+    messages = " | ".join(
+        v.message for v in run_checks(FIXTURES / "purity_bad",
+                                      rules=["core-purity"]))
+    for fragment in ("time.", "os.environ", "random.", "open", "threading"):
+        assert fragment in messages, (fragment, messages)
+
+
+def test_effects_bad_finds_all_four_gaps():
+    messages = " | ".join(
+        v.message for v in run_checks(FIXTURES / "effects_bad",
+                                      rules=["effect-exhaustiveness"]))
+    assert "ClientLost" in messages      # event without handle branch
+    assert "LaunchProbe" in messages     # effect without _apply branch
+    assert "MsgType.PING" in messages    # produced, never consumed
+    assert "MsgType.PONG" in messages    # consumed, never produced
+
+
+def test_seq_bad_finds_all_three_shapes():
+    messages = " | ".join(
+        v.message for v in run_checks(FIXTURES / "seq_bad",
+                                      rules=["seq-discipline"]))
+    assert "STOP" in messages                       # control via _send
+    assert "per-client" in messages                 # srv_seq fan-out
+    assert "both srv_seq and ctrl_seq" in messages  # mixed planes
+
+
+def test_live_tree_is_clean():
+    assert run_checks(REPO) == []
+
+
+def test_suppression_comments():
+    assert run_checks(FIXTURES / "suppressed", rules=["core-purity"]) == []
+
+
+def test_unknown_rule_rejected():
+    with pytest.raises(ValueError, match="no-such-rule"):
+        run_checks(FIXTURES / "purity_bad", rules=["no-such-rule"])
+
+
+def test_cli_json_and_exit_codes():
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    bad = subprocess.run(
+        [sys.executable, "-m", "repro.analysis",
+         "--root", str(FIXTURES / "purity_bad"), "--json"],
+        capture_output=True, text=True, env=env)
+    assert bad.returncode == 1, bad.stdout + bad.stderr
+    payload = json.loads(bad.stdout)
+    assert payload["ok"] is False
+    assert all({"rule", "path", "line", "message"} <= set(v)
+               for v in payload["violations"])
+    clean = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--root", str(REPO)],
+        capture_output=True, text=True, env=env)
+    assert clean.returncode == 0, clean.stdout + clean.stderr
+    usage = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--rules", "typo"],
+        capture_output=True, text=True, env=env)
+    assert usage.returncode == 2

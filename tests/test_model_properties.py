@@ -93,7 +93,7 @@ def test_hardness_monotone_in_shape():
         from repro.configs.shapes import ShapeConfig
         bigger = ShapeConfig("x", 4096, 512, "train")
         tb = hardness_tuple(cfg, bigger)
-        assert all(b >= a for a, b in zip(t4, tb)), arch
+        assert all(b >= a for a, b in zip(t4, tb, strict=True)), arch
 
 
 def test_model_flops_scale_with_tokens():

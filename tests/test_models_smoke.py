@@ -14,11 +14,8 @@ from repro.models.params import init_params, param_count
 
 def make_batch(cfg, B=2, S=64, rng=None):
     rng = rng or jax.random.PRNGKey(1)
-    if cfg.num_codebooks:
-        tok = jax.random.randint(rng, (B, S, cfg.num_codebooks), 0,
-                                 cfg.vocab_size)
-    else:
-        tok = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    shape = (B, S, cfg.num_codebooks) if cfg.num_codebooks else (B, S)
+    tok = jax.random.randint(rng, shape, 0, cfg.vocab_size)
     batch = {"tokens": tok}
     if cfg.vision_stub:
         batch["image_embeds"] = jnp.zeros(

@@ -41,7 +41,7 @@ def test_scheduler_invariants(specs, deadline, max_clients):
     # 3. every pruned task dominates some timed-out hardness
     timed_out = [Hardness((p[0], p[1])) for p, r, s in table.rows
                  if s == "timed_out"]
-    for p, r, s in table.rows:
+    for p, _r, s in table.rows:
         if s == "pruned":
             h = Hardness((p[0], p[1]))
             assert any(h.geq(t) for t in timed_out), (p, s)

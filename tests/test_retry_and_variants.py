@@ -49,7 +49,8 @@ def test_kv_shard_model_reduces_decode_bytes():
         r = subprocess.run(cmd, capture_output=True, text=True, env=env,
                            timeout=520, cwd=ROOT)
         assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]
-        return json.load(open(out))
+        with open(out) as f:
+            return json.load(f)
 
     base = run([], "/tmp/kvshard_base.json")
     shard = run(["kv_shard_model=1"], "/tmp/kvshard_on.json")

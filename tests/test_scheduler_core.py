@@ -74,7 +74,7 @@ def _random_events(seed: int, cfg: ServerConfig, n_tasks: int = 12):
         msg_seq += 1
         return m
 
-    for step in range(60):
+    for _ in range(60):
         now += rng.uniform(0.01, 0.8)
         owned = sorted((c, tid) for c, ci in scratch.clients.items()
                        for tid in ci.assigned)
@@ -380,7 +380,8 @@ def test_sim_results_carry_cost_columns():
     table = srv.final_results
     assert table.cost is not None and table.cost["total"] > 0
     assert "client" in table.cost["by_kind"]
-    solved_costs = [c for (p, r, s), c in zip(table.rows, table.row_costs)
+    solved_costs = [c for (p, r, s), c in zip(table.rows, table.row_costs,
+                                              strict=True)
                     if s == "done"]
     assert solved_costs and all(c is not None and c > 0
                                 for c in solved_costs)

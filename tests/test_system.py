@@ -36,7 +36,7 @@ def test_expocloud_drives_real_dryrun_cells(tmp_path):
     table = srv.run(poll_sleep=0.2)
     engine.shutdown()
     assert all(s == "done" for _, _, s in table.rows), table.rows
-    for params, result, status in table.rows:
+    for _params, result, _status in table.rows:
         assert result[0] == "ok"
         assert result[1] in ("compute", "memory", "collective")
         assert os.path.exists(result[-1])  # json record path
