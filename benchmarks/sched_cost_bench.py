@@ -53,7 +53,8 @@ def _workload():
             for i in range(1, N_TASKS + 1)]
 
 
-def _run(scale: str, budget_cap: float | None = None) -> dict:
+def _run(scale: str, budget_cap: float | None = None,
+         shards: int = 1) -> dict:
     cfg = ServerConfig(max_clients=MAX_CLIENTS, use_backup=False,
                        workers_hint=WORKERS, scale_policy=scale,
                        budget_cap=budget_cap,
@@ -61,19 +62,29 @@ def _run(scale: str, budget_cap: float | None = None) -> dict:
     h = Experiment(_workload(), engine="sim",
                    sim=SimParams(client_workers=WORKERS, seed=0,
                                  min_billing_s=MIN_BILLING_S),
-                   config=cfg).run()
+                   shards=shards, config=cfg).run()
     cl = h.cluster
+    engines = cl.engines if shards > 1 else [cl.engine]
     t0 = time.perf_counter()
     table = h.results(until=3600)
     # let the BYE round trips drain so every client instance is closed
+    # (each shard engine keeps its own primary alive)
     steps = 0
-    while len(cl.engine.list_instances()) > 1 and steps < 3000:
+    while sum(len(e.list_instances()) for e in engines) > len(engines) \
+            and steps < 3000:
         cl.step()
         steps += 1
     wall = time.perf_counter() - t0
     now = cl.clock.now()
-    meter = CostMeter()
-    meter.sync(cl.engine.billing_records())
+    # one CostMeter per shard engine (shard engines each bill their own
+    # "primary"), aggregated by summing — the run-level summary on the
+    # merged table (table.cost) is the same aggregation done server-side
+    # via merge_cost_summaries
+    meters = []
+    for e in engines:
+        meter = CostMeter()
+        meter.sync(e.billing_records())
+        meters.append(meter)
     assert table.cost is not None \
         and table.cost["total"] > 0, "cost column not populated"
     assert table.row_costs is not None \
@@ -81,13 +92,16 @@ def _run(scale: str, budget_cap: float | None = None) -> dict:
     return {
         "scale_policy": scale,
         "budget_cap": budget_cap,
-        "clients_created": sum(1 for _, k in cl.engine._kinds.items()
+        "shards": shards,
+        "clients_created": sum(1 for e in engines
+                               for _, k in e._kinds.items()
                                if k == "client"),
         "solved": sum(1 for _, r, _ in table.rows if r is not None),
         "tasks": len(table.rows),
         "makespan_s": round(now, 1),
-        "total_cost": round(meter.accrued(now), 1),
-        "client_cost": round(meter.by_kind(now).get("client", 0.0), 1),
+        "total_cost": round(sum(m.accrued(now) for m in meters), 1),
+        "client_cost": round(sum(m.by_kind(now).get("client", 0.0)
+                                 for m in meters), 1),
         "cost_at_done": table.cost["total"],
         "wall_s": round(wall, 4),
     }
@@ -97,17 +111,23 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="assert saving floor + budget cap (CI)")
+    ap.add_argument("--shards", type=int, default=2,
+                    help="shard count for the sharded cost-accounting run "
+                         "(CostMeter aggregated across shards into one "
+                         "ResultsTable summary)")
     ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_sched.json"))
     args = ap.parse_args(argv)
 
     fixed = _run("fixed")
     demand = _run("demand")
     capped = _run("fixed", budget_cap=BUDGET_CAP)
+    sharded = _run("demand", shards=args.shards)
     saving = 1.0 - demand["client_cost"] / max(fixed["client_cost"], 1e-9)
 
-    for r in (fixed, demand, capped):
+    for r in (fixed, demand, capped, sharded):
         cap = f" cap={r['budget_cap']}" if r["budget_cap"] else ""
-        print(f"{r['scale_policy']:6s}{cap:9s}: "
+        shard_note = f" x{r['shards']}sh" if r["shards"] > 1 else ""
+        print(f"{r['scale_policy']:6s}{cap:9s}{shard_note:6s}: "
               f"{r['clients_created']:2d} clients, "
               f"cost {r['total_cost']:7.1f}, "
               f"makespan {r['makespan_s']:6.1f}s, "
@@ -124,6 +144,7 @@ def main(argv=None):
         "fixed": fixed,
         "demand": demand,
         "budget_capped": capped,
+        "sharded_demand": sharded,
         "demand_saving_pct": round(100 * saving, 1),
     }
     with open(args.out, "w") as f:
@@ -137,6 +158,11 @@ def main(argv=None):
         assert out["demand_saving_pct"] >= 25.0, out
         assert capped["total_cost"] <= BUDGET_CAP, out
         assert capped["clients_created"] < fixed["clients_created"], out
+        # sharded run: every task solved and the merged table carries an
+        # across-shards cost summary consistent with the engine meters
+        assert sharded["solved"] == N_TASKS, out
+        assert sharded["cost_at_done"] > 0, out
+        assert sharded["total_cost"] > 0, out
     return out
 
 

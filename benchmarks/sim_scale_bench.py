@@ -7,16 +7,25 @@ The smallest points are also run under the legacy fixed-dt polling loop
 (``SimParams(mode="fixed")``) to measure the event engine's speedup on an
 identical scenario (identical final results table, asserted).
 
+The fleet section scales to 10,000 clients / 60,000 task cells and runs
+the same scenario sharded (``Experiment(..., shards=8)``) and under a
+single scheduler, asserting that both runs solve/prune every task exactly
+once with identical solved and pruned∪timed-out sets, and that the
+sharded run sustains ``FLEET_FLOOR`` aggregate events/sec in its steady
+window (floor asserted in ``--smoke``).
+
 Results land in BENCH_sim.json at the repo root.
 
 Usage:
     PYTHONPATH=src python benchmarks/sim_scale_bench.py [--smoke] [--out F]
 
-``--smoke`` runs a reduced sweep with a hard speedup floor, for CI.
+``--smoke`` runs a reduced sweep with hard floors, for CI.
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
+import gc
 import json
 import os
 import sys
@@ -26,10 +35,30 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
 
 from repro.core.experiment import Experiment        # noqa: E402
+from repro.core.scheduler import DONE, PRUNED, TIMED_OUT  # noqa: E402
 from repro.core.server import ServerConfig          # noqa: E402
 from repro.core.sim import InstanceType, SimParams, SimTask  # noqa: E402
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def retry_measurement(out: dict, label: str, first, measure, accept, best,
+                      retries: int = 1):
+    """Noisy-runner guard shared by every smoke-floor measurement.
+
+    Keeps ``first`` when ``accept`` passes; otherwise re-runs ``measure``
+    up to ``retries`` times, folding each repeat in with ``best`` (``max``
+    for scalars, an argmax lambda for records) and appending it under
+    ``out["retries"][label]`` — the artifact shows exactly how flaky the
+    runner was instead of silently absorbing it."""
+    result = first
+    for _ in range(retries):
+        if accept(result):
+            break
+        again = measure()
+        out.setdefault("retries", {}).setdefault(label, []).append(again)
+        result = best(result, again)
+    return result
 
 
 def _workload(n_clients: int, tasks_per_client: int, dur_lo: float,
@@ -149,6 +178,202 @@ def ready_poll_comparison(n_clients: int, repeats: int = 3) -> dict:
     }
 
 
+# ---------------------------------------------------------------------------
+# fleet scale: 10k clients / 60k task cells, sharded vs single-scheduler.
+#
+# The aggregate throughput metric counts, summed across shards:
+#   * event-loop events processed,
+#   * wire messages sent, and
+#   * logical scheduling events (grants, report ACKs, results, hardness
+#     reports, log entries, domino deliveries) — counted per *item* by
+#     the scheduler cores, so the metric is invariant to transport
+#     batching: coalescing messages drives wall time down without
+#     deflating the numerator.
+# The run is split at FLEET_BOOT_T into a boot window (fleet spin-up:
+# instance creation delays, handshakes, first grants) and the steady
+# window where the scheduling planes are saturated; the ≥FLEET_FLOOR
+# floor is asserted on the steady window ("sustains", not "peaks").
+# ---------------------------------------------------------------------------
+FLEET_NA, FLEET_NB = 300, 200            # 60,000 task cells
+FLEET_BASE, FLEET_DEADLINE = 0.05, 1.2
+FLEET_CLIENTS = 10_000
+FLEET_SHARDS = 8
+FLEET_BOOT_T = 0.55                      # creation_delay 0.5 + margin
+FLEET_FLOOR = 200_000                    # aggregate events/sec, steady
+
+
+def _fleet_grid():
+    # duration is a quantized step function of (a, b): cells with
+    # duration > FLEET_DEADLINE time out and domino-prune their
+    # dominated peers; the rest solve.  Hardness (a*b) is monotone
+    # enough for contiguous-hardness sharding to split the frontier.
+    return [SimTask((a, b), ("a", "b"), (a, b),
+                    FLEET_BASE * (a // 10 + b // 50 + 1), FLEET_DEADLINE,
+                    (a * b,))
+            for a in range(FLEET_NA) for b in range(FLEET_NB)]
+
+
+@contextlib.contextmanager
+def _gc_paused():
+    """Freeze the object graph and disable collection for the measured
+    run: generational GC sweeps over the ~10^6 live simulation objects
+    otherwise dominate wall time (observed 30-40%) and add most of the
+    run-to-run noise."""
+    gc.collect()
+    gc.freeze()
+    gc.disable()
+    try:
+        yield
+    finally:
+        gc.enable()
+        gc.unfreeze()
+        gc.collect()
+
+
+def _fleet_cores(cluster):
+    if hasattr(cluster, "engines"):      # ShardedSimCluster
+        return cluster.engines, [srv.core for srv in cluster.servers]
+    return [cluster.engine], [cluster.server.core]
+
+
+def _fleet_counters(cluster):
+    engines, cores = _fleet_cores(cluster)
+    ev = cluster.loop.processed
+    msgs = sum(e.network.messages_sent for e in engines)
+    stats: dict[str, int] = {}
+    for core in cores:
+        for k, v in core.stats.items():
+            stats[k] = stats.get(k, 0) + v
+    return ev, msgs, stats
+
+
+def _fleet_status_sets(cluster):
+    """(solved, unsolved, nonterminal) sets of task parameter tuples —
+    the global task identity across shard-local tid spaces."""
+    solved, unsolved, nonterminal = set(), set(), set()
+    for core in _fleet_cores(cluster)[1]:
+        for tid, st in enumerate(core.status):
+            key = core.tasks[tid].parameters()
+            if st == DONE:
+                solved.add(key)
+            elif st in (PRUNED, TIMED_OUT):
+                unsolved.add(key)
+            else:
+                nonterminal.add(key)
+    return solved, unsolved, nonterminal
+
+
+def _fleet_window(ev, msgs, stats, wall):
+    logical = sum(stats.values())
+    total = ev + msgs + logical
+    return {
+        "wall_s": round(wall, 4),
+        "loop_events": ev,
+        "wire_messages": msgs,
+        "logical_events": logical,
+        "events_per_sec": round(total / wall) if wall > 0 else 0,
+    }
+
+
+def run_fleet(shards: int):
+    """One fleet run; returns (record, (solved, unsolved, nonterminal))."""
+    n_per_shard = FLEET_CLIENTS // shards
+    params = SimParams(
+        client_workers=6, mode="events", seed=0, ready_poll=True,
+        min_create_interval=0.0, client_health_interval=1e6,
+        wake_quantum=0.05,
+        instance_types={"client": InstanceType(
+            creation_delay=0.5, cost_per_instance_second=1.0)})
+    config = ServerConfig(
+        max_clients=n_per_shard, use_backup=False,
+        health_update_limit=1e9, health_interval=1e6,
+        instance_max_non_active_time=1e9, create_batch=n_per_shard)
+    h = Experiment(_fleet_grid(), engine="sim", shards=shards,
+                   engine_cfg={"params": params}, config=config).run()
+    cl = h.cluster
+    with _gc_paused():
+        t0 = time.perf_counter()
+        while True:                      # boot: drive up to FLEET_BOOT_T
+            nt = cl.loop.next_time()
+            if nt is None or nt >= FLEET_BOOT_T:
+                break
+            cl.step()
+        t1 = time.perf_counter()
+        b_ev, b_msgs, b_stats = _fleet_counters(cl)
+        cl.run(until=1e6, max_steps=20_000_000)
+        t2 = time.perf_counter()
+    ev, msgs, stats = _fleet_counters(cl)
+    n_rows = (len(cl.merged_results().rows) if hasattr(cl, "engines")
+              else len(h.shard_servers[0].final_results.rows))
+    sets = _fleet_status_sets(cl)
+    s_stats = {k: stats[k] - b_stats.get(k, 0) for k in stats}
+    record = {
+        "scenario": "fleet",
+        "shards": shards,
+        "n_clients": FLEET_CLIENTS,
+        "tasks": FLEET_NA * FLEET_NB,
+        "rows": n_rows,
+        "solved": len(sets[0]),
+        "pruned_or_timed_out": len(sets[1]),
+        "sim_makespan_s": round(cl.clock.now(), 3),
+        "boot": _fleet_window(b_ev, b_msgs, b_stats, t1 - t0),
+        "steady": _fleet_window(ev - b_ev, msgs - b_msgs, s_stats, t2 - t1),
+        "total": _fleet_window(ev, msgs, stats, t2 - t0),
+        "logical_stats_steady": s_stats,
+    }
+    return record, sets
+
+
+def fleet_comparison(out: dict, smoke: bool) -> dict:
+    """Sharded (K=FLEET_SHARDS) vs single-scheduler fleet run: asserts
+    exactly-once terminal status and identical solved / pruned sets, and
+    (in smoke) holds the sharded steady window to the throughput floor
+    with a noisy-runner retry."""
+    single, single_sets = run_fleet(1)
+    sharded, sharded_sets = run_fleet(FLEET_SHARDS)
+
+    def check(rec, sets, other_sets=None):
+        solved, unsolved, nonterminal = sets
+        assert not nonterminal, \
+            f"{len(nonterminal)} tasks ended non-terminal ({rec['shards']}" \
+            f" shards)"
+        assert not (solved & unsolved), "a task is both solved and pruned"
+        assert len(solved) + len(unsolved) == rec["tasks"], \
+            "task lost: terminal statuses do not cover the grid"
+        assert rec["rows"] == rec["tasks"], \
+            f"results table has {rec['rows']} rows for {rec['tasks']} tasks"
+        if other_sets is not None:
+            assert solved == other_sets[0], \
+                "sharded and single-scheduler solved sets differ"
+            assert unsolved == other_sets[1], \
+                "sharded and single-scheduler pruned sets differ"
+        return rec
+
+    check(single, single_sets)
+    check(sharded, sharded_sets, single_sets)
+
+    def measure():
+        rec, sets = run_fleet(FLEET_SHARDS)
+        return check(rec, sets, single_sets)
+
+    if smoke:
+        sharded = retry_measurement(
+            out, "fleet_floor", sharded, measure,
+            lambda r: r["steady"]["events_per_sec"] >= FLEET_FLOOR,
+            lambda a, b: (b if b["steady"]["events_per_sec"]
+                          > a["steady"]["events_per_sec"] else a),
+            retries=2)
+    for rec in (single, sharded):
+        print(f"fleet {rec['shards']:2d} shard(s): "
+              f"boot {rec['boot']['wall_s']:.2f}s, "
+              f"steady {rec['steady']['wall_s']:.2f}s "
+              f"@ {rec['steady']['events_per_sec']:,} ev/s, "
+              f"solved={rec['solved']} "
+              f"pruned/timed-out={rec['pruned_or_timed_out']}")
+    return {"floor_events_per_sec": FLEET_FLOOR,
+            "single": single, "sharded": sharded}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -203,19 +428,26 @@ def main(argv=None):
         "ready_poll": ready,
         "max_speedup": max(c["speedup"] for c in comparisons),
     }
-    if args.smoke and out["max_speedup"] < 5.0:
+    if args.smoke:
         # wall-clock noise on shared CI runners can dent a single
-        # measurement: retry once before declaring a regression, and
-        # record the retry in the artifact
-        scenario, n = compare[0]
-        ev = _run_once(n, "events", scenario)
-        fx = _run_once(n, "fixed", scenario)
-        retry = round(fx["wall_s"] / max(ev["wall_s"], 1e-9), 1)
-        out["smoke_retry_speedup"] = retry
-        out["max_speedup"] = max(out["max_speedup"], retry)
-    if args.smoke and out["ready_poll"]["speedup"] < 1.0:
-        # noisy-runner retry, recorded in the artifact
-        out["ready_poll_retry"] = ready_poll_comparison(50)
+        # measurement: retry before declaring a regression, with every
+        # repeat recorded under out["retries"]
+        def _measure_speedup():
+            scenario, n = compare[0]
+            ev = _run_once(n, "events", scenario)
+            fx = _run_once(n, "fixed", scenario)
+            return round(fx["wall_s"] / max(ev["wall_s"], 1e-9), 1)
+
+        out["max_speedup"] = retry_measurement(
+            out, "max_speedup", out["max_speedup"], _measure_speedup,
+            lambda s: s >= 5.0, max)
+        out["ready_poll"] = retry_measurement(
+            out, "ready_poll", ready, lambda: ready_poll_comparison(50),
+            lambda r: r["speedup"] >= 1.0,
+            lambda a, b: b if b["speedup"] > a["speedup"] else a)
+
+    out["fleet"] = fleet_comparison(out, smoke=args.smoke)
+
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {args.out}")
@@ -226,11 +458,14 @@ def main(argv=None):
         assert out["max_speedup"] >= 5.0, out["fixed_vs_events"]
         assert all(r["solved"] == r["tasks"] for r in sweep), sweep
         # ready-set polling must never cost wall time (it wins ~1.2-1.3x
-        # on quiet fleets; noisy runners got one retry above)
-        best_ready = max(out["ready_poll"]["speedup"],
-                         out.get("ready_poll_retry", {}).get("speedup", 0.0))
-        assert best_ready >= 1.0, \
-            (out["ready_poll"], out.get("ready_poll_retry"))
+        # on quiet fleets; noisy runners got retries above)
+        assert out["ready_poll"]["speedup"] >= 1.0, \
+            (out["ready_poll"], out.get("retries"))
+        # fleet floor: the sharded 10k-client scenario must sustain the
+        # aggregate throughput floor in its steady window
+        assert (out["fleet"]["sharded"]["steady"]["events_per_sec"]
+                >= FLEET_FLOOR), \
+            (out["fleet"]["sharded"]["steady"], out.get("retries"))
     return out
 
 

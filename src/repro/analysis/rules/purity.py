@@ -9,8 +9,9 @@ replay, the exact failure mode backup takeover cannot tolerate.
 
 Scope (two tiers):
 
-  * **strict** (``core/scheduler.py``, ``core/hardness.py``): pure state
-    machines — additionally no file I/O, ``print`` or console input.
+  * **strict** (``core/scheduler.py``, ``core/hardness.py``,
+    ``core/shard.py``): pure state machines — additionally no file I/O,
+    ``print`` or console input.
   * **determinism** (``core/trace.py``, ``core/sim.py``): the simulator
     and trace layer may perform explicit, caller-requested persistence
     (``Trace.write``/``load``) but must draw every nondeterministic
@@ -28,6 +29,7 @@ from repro.analysis.framework import Project, Rule, Violation
 STRICT_FILES = (
     "src/repro/core/scheduler.py",
     "src/repro/core/hardness.py",
+    "src/repro/core/shard.py",
 )
 DETERMINISM_FILES = (
     "src/repro/core/trace.py",

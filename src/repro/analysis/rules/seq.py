@@ -11,11 +11,14 @@ The fix gave control broadcasts their own control-plane counter
      ``ctrl_seq`` (one message, one counter plane),
   2. in ``core/scheduler.py``, a send constructed inside an iteration
      over ``self.clients`` in any method **other than** ``on_message``
-     is a broadcast and must pass ``ctrl_seq`` (and must not use the
-     ``self._send`` helper, which consumes ``srv_seq``).  ``on_message``
-     is exempt: its fan-outs (e.g. APPLY_DOMINO_EFFECT) replay on the
-     backup through the FORWARDed client message, so per-client srv_seq
-     consumption is mirrored exactly,
+     is a broadcast and must either pass ``ctrl_seq`` or ride the
+     *counterless plane* (ACK / APPLY_DOMINO_EFFECT with neither
+     counter: idempotent, order-free deliveries — outbox pops and
+     frontier unions — need no dedup counter, so there is no counter
+     state to diverge).  It must not use the ``self._send`` helper,
+     which consumes ``srv_seq``.  ``on_message`` is exempt: its
+     fan-outs replay on the backup through the FORWARDed client
+     message, so per-client srv_seq consumption is mirrored exactly,
   3. ``MsgType.STOP``/``MsgType.RESUME`` must never flow through
      ``self._send`` or a ``srv_seq=``-carrying constructor anywhere in
      the core — they are control-plane by definition.
@@ -33,6 +36,11 @@ CORE_GLOB = "src/repro/core/*.py"
 # replays the same event, so per-client srv_seq consumption is mirrored)
 _REPLICATED_HANDLERS = {"on_message"}
 _CONTROL_MEMBERS = {"STOP", "RESUME"}
+# message types allowed to fan out with *no* counter at all: their
+# deliveries are idempotent and order-free (ACK pops an outbox entry,
+# APPLY_DOMINO_EFFECT unions the pruning frontier), so duplicates and
+# reorderings are harmless and there is no counter state to diverge
+_COUNTERLESS_MEMBERS = {"ACK", "APPLY_DOMINO_EFFECT"}
 
 
 def _is_clients_iter(node: ast.expr) -> bool:
@@ -89,6 +97,17 @@ def _is_control_member(node: ast.expr) -> bool:
             and isinstance(node.value, ast.Name)
             and node.value.id == "MsgType"
             and node.attr in _CONTROL_MEMBERS)
+
+
+def _is_counterless_send(call: ast.Call) -> bool:
+    """True for ``Send(name, MsgType.ACK/APPLY_DOMINO_EFFECT, ...)``
+    carrying *neither* counter kwarg — the counterless plane."""
+    if _kw(call, "srv_seq") is not None or _kw(call, "ctrl_seq") is not None:
+        return False
+    mtypes = [a for a in list(call.args) + [kw.value for kw in call.keywords]
+              if isinstance(a, ast.Attribute)
+              and isinstance(a.value, ast.Name) and a.value.id == "MsgType"]
+    return any(a.attr in _COUNTERLESS_MEMBERS for a in mtypes)
 
 
 class SeqDisciplineRule(Rule):
@@ -193,10 +212,12 @@ class SeqDisciplineRule(Rule):
                 f"`{method.name}` — this is a broadcast consuming one "
                 "srv_seq per client, which the backup cannot mirror; use "
                 "control_broadcast()/ctrl_seq")]
-        if name == "Send" and _kw(call, "ctrl_seq") is None:
+        if name == "Send" and _kw(call, "ctrl_seq") is None \
+                and not _is_counterless_send(call):
             return [self.violation(
                 SCHEDULER, call,
                 f"Send(...) constructed per-client in `{method.name}` "
                 "without ctrl_seq — broadcasts must ride the "
-                "control-plane counter")]
+                "control-plane counter (or be a counterless "
+                "ACK/APPLY_DOMINO_EFFECT carrying no counter at all)")]
         return []

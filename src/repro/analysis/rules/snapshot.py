@@ -7,11 +7,14 @@ backup — the exact divergence class behind the srv_seq bug (PR 4): both
 sides keep running, their states drift, and the first takeover
 double-assigns or loses work.
 
-The rule cross-references three sites in ``core/scheduler.py``:
+The rule cross-references three sites per snapshot-bearing core class
+(``SchedulerCore`` in ``core/scheduler.py``, ``ShardCoordinator`` in
+``core/shard.py``):
 
-  * attributes assigned on ``self`` directly in ``SchedulerCore.__init__``
-    (derived state built by ``_build_policies`` is excluded because it is
-    deterministically rebuilt from config on both paths),
+  * attributes assigned on ``self`` directly in the class ``__init__``
+    (derived state built by helpers like ``_build_policies`` /
+    ``_init_derived`` is excluded because it is deterministically
+    rebuilt on both paths),
   * string keys of the dict literal returned by ``snapshot()``,
   * attributes assigned in ``restore()``.
 
@@ -27,6 +30,14 @@ import ast
 from repro.analysis.framework import Project, Rule, Violation
 
 SCHEDULER = "src/repro/core/scheduler.py"
+
+# (path, class) pairs whose snapshot()/restore() must round-trip every
+# __init__ field — takeover (SchedulerCore) and sharded-run resume
+# (ShardCoordinator) both silently drop state otherwise
+TARGETS = (
+    (SCHEDULER, "SchedulerCore"),
+    ("src/repro/core/shard.py", "ShardCoordinator"),
+)
 
 
 def _find_class(tree: ast.AST, name: str) -> ast.ClassDef | None:
@@ -93,57 +104,65 @@ def _snapshot_keys(func: ast.FunctionDef) -> dict[str, int] | None:
 
 class SnapshotCompletenessRule(Rule):
     name = "snapshot-completeness"
-    description = ("every SchedulerCore.__init__ field must appear in "
-                   "snapshot() and be reassigned in restore()")
+    description = ("every snapshot-bearing core class's __init__ field "
+                   "must appear in snapshot() and be reassigned in "
+                   "restore()")
 
     def check(self, project: Project) -> list[Violation]:
-        tree = project.tree(SCHEDULER)
-        if tree is None:
-            return []
-        core = _find_class(tree, "SchedulerCore")
-        if core is None:
-            return []
-        init = _find_method(core, "__init__")
-        snapshot = _find_method(core, "snapshot")
-        restore = _find_method(core, "restore")
+        out: list[Violation] = []
+        for path, cls_name in TARGETS:
+            tree = project.tree(path)
+            if tree is None:
+                continue
+            cls = _find_class(tree, cls_name)
+            if cls is None:
+                continue
+            out.extend(self._check_class(path, cls_name, cls))
+        return out
+
+    def _check_class(self, path: str, cls_name: str,
+                     cls: ast.ClassDef) -> list[Violation]:
+        init = _find_method(cls, "__init__")
+        snapshot = _find_method(cls, "snapshot")
+        restore = _find_method(cls, "restore")
         out: list[Violation] = []
         if init is None or snapshot is None or restore is None:
             out.append(self.violation(
-                SCHEDULER, core,
-                "SchedulerCore must define __init__, snapshot() and "
-                "restore() — takeover depends on all three"))
+                path, cls,
+                f"{cls_name} must define __init__, snapshot() and "
+                "restore() — takeover/resume depends on all three"))
             return out
         keys = _snapshot_keys(snapshot)
         if keys is None:
             out.append(self.violation(
-                SCHEDULER, snapshot,
+                path, snapshot,
                 "snapshot() must return a dict literal with constant "
                 "string keys so completeness is statically checkable"))
             return out
         fields = _self_assigns(init)
         restored = _restore_assigns(restore)
         # fields that __init__ builds via helper calls rather than direct
-        # self-assignments are invisible here by design (_build_policies
-        # rebuilds derived policy objects from config on both paths)
+        # self-assignments are invisible here by design (_build_policies /
+        # _init_derived rebuild derived objects from config on both paths)
         for attr, line in sorted(fields.items()):
             key = attr.lstrip("_")
             if attr not in keys and key not in keys:
                 out.append(self.violation(
-                    SCHEDULER, line,
+                    path, line,
                     f"core field `self.{attr}` is not captured by "
                     "snapshot() — it silently resets on backup "
                     "restore/takeover"))
             if attr not in restored:
                 out.append(self.violation(
-                    SCHEDULER, line,
+                    path, line,
                     f"core field `self.{attr}` is not reassigned in "
                     "restore() — restored cores would lack it"))
         field_keys = {a.lstrip("_") for a in fields} | set(fields)
         for key, line in sorted(keys.items()):
             if key not in field_keys:
                 out.append(self.violation(
-                    SCHEDULER, line,
+                    path, line,
                     f"snapshot() key \"{key}\" has no matching "
-                    "SchedulerCore.__init__ field — stale after a "
+                    f"{cls_name}.__init__ field — stale after a "
                     "refactor?"))
         return out

@@ -23,7 +23,10 @@ from repro.core.policy import (AssignPolicy, BudgetPolicy, CostMeter,
                                ScalePolicy)
 from repro.core.results import ResultsTable
 from repro.core.server import Server, ServerConfig
-from repro.core.sim import InstanceType, SimCluster, SimParams, SimTask
+from repro.core.shard import (ShardCoordinator, merge_cost_summaries,
+                              merge_results, partition_tasks, pump_gossip)
+from repro.core.sim import (InstanceType, ShardedSimCluster, SimCluster,
+                            SimParams, SimTask)
 from repro.core.space import Axis, ParamSpace, axis, task
 from repro.core.task import AbstractTask
 
@@ -41,8 +44,11 @@ __all__ = [
     "AbstractEngine", "LocalEngine", "GCEEngine", "TPUPodEngine",
     "RateLimited", "EngineUnavailable",
     # simulator + server stack (advanced / deprecated direct wiring)
-    "SimCluster", "SimParams", "SimTask", "InstanceType",
-    "Server", "ServerConfig", "Message", "MsgType",
+    "SimCluster", "ShardedSimCluster", "SimParams", "SimTask",
+    "InstanceType", "Server", "ServerConfig", "Message", "MsgType",
+    # sharded hierarchical scheduling (core.shard)
+    "ShardCoordinator", "partition_tasks", "pump_gossip",
+    "merge_results", "merge_cost_summaries",
     # policies + cost
     "AssignPolicy", "ScalePolicy", "BudgetPolicy", "CostMeter",
 ]

@@ -13,6 +13,7 @@ sends BYE so the server can delete this instance (cost saving).
 from __future__ import annotations
 
 import collections
+import heapq
 import time
 
 from repro.core.hardness import Hardness
@@ -28,6 +29,15 @@ class Client:
         self.primary = primary_channel
         self.backup = backup_channel
         self.pool = pool
+        # zero-copy running view when the pool offers one (hot-path
+        # sweeps run every step; copying the dict three times per wake
+        # dominated fleet-scale client cost)
+        self._pool_running = getattr(pool, "running_ref", pool.running)
+        self._drain_started = getattr(pool, "drain_started", None)
+        # grant receipts acknowledged this step; flushed with the started
+        # tids as one "lifecycle" LOG after phase 5 instead of one wire
+        # message per GRANT
+        self._granted_pending: list[int] = []
         self.clock = clock
         self.health_interval = health_interval
         self._last_health = -1e18
@@ -40,6 +50,12 @@ class Client:
         self.tasks: dict[int, object] = {}     # tid -> task (granted)
         self.queue: collections.deque[int] = collections.deque()  # granted,
         #   not yet started (deque: starts pop from the front in O(1))
+        # (deadline, tid) min-heap of running tasks' timeout instants —
+        # the per-step sweep and next_wake pop/peek this instead of
+        # scanning every running task every wake.  Entries go stale when
+        # a task completes or is terminated (domino/regrant); consumers
+        # verify against the live running set and drop or re-push
+        self._deadline_heap: list[tuple[float, int]] = []
         self.outstanding = 0                   # requested, not yet granted
         self.no_further = False
         self.stopped = False
@@ -83,39 +99,73 @@ class Client:
             self.send_to_servers(MsgType.HEALTH_UPDATE)
             self._last_health = now
 
-        # 2. worker events
+        # 2. worker events — uploads are batched per wake: lifecycle LOGs
+        #    as one {"tids": [...]} message and RESULTs as one
+        #    {"results": [[tid, result], ...]} message riding a single
+        #    at-least-once outbox entry (the server's per-item handling is
+        #    idempotent, so a retried batch just re-applies no-ops).
+        #    EXCEPTION stays per-task (rare, carries a traceback payload).
+        #    No separate "done" LOG rides the wire: the server synthesizes
+        #    the log entry from the RESULT batch itself
+        started: list = []
+        results: list = []
         for ev in self.pool.poll():
             if ev.kind == WorkerEvent.STARTED:
-                self.send_to_servers(MsgType.LOG,
-                                     {"event": "started", "tid": ev.task_id})
+                started.append(ev.task_id)
             elif ev.kind == WorkerEvent.DONE:
-                self.send_to_servers(MsgType.RESULT,
-                                     {"tid": ev.task_id, "result": ev.payload})
-                self.send_to_servers(MsgType.LOG,
-                                     {"event": "done", "tid": ev.task_id})
+                results.append((ev.task_id, ev.payload))
                 self.tasks.pop(ev.task_id, None)
             elif ev.kind == WorkerEvent.ERROR:
                 self.send_to_servers(MsgType.EXCEPTION,
                                      {"tid": ev.task_id, "error": ev.payload})
                 self.tasks.pop(ev.task_id, None)
+        if results:
+            self.send_to_servers(MsgType.RESULT, {"results": results})
+        # the "started" LOG is sent after phase 5, so tasks started later
+        # this same step (sim pools drain synchronously) ride along
 
-        # 6 (interleaved). timeout enforcement
-        for tid, t0 in list(self.pool.running().items()):
-            task = self.tasks.get(tid)
-            if task is None:
-                continue
-            deadline = task.timeout()
-            if deadline is not None and now - t0 > deadline:
+        # 6 (interleaved). timeout enforcement: pop due entries off the
+        # deadline heap instead of scanning every running task every wake
+        # (collect first, mutate after).  A popped entry is re-verified
+        # against the live running set — completed/terminated tasks left
+        # stale entries, and a re-granted task's fresh start time gets a
+        # corrected entry pushed back
+        timed_out = None
+        heap = self._deadline_heap
+        if heap and heap[0][0] < now:
+            running = self._pool_running()
+            while heap and heap[0][0] < now:
+                _, tid = heapq.heappop(heap)
+                task = self.tasks.get(tid)
+                if task is None:
+                    continue
+                t0 = running.get(tid)
+                if t0 is None:
+                    continue
+                deadline = task.timeout()
+                if deadline is None:
+                    continue
+                if now - t0 > deadline:
+                    if timed_out is None:
+                        timed_out = []
+                    timed_out.append((tid, task))
+                else:
+                    heapq.heappush(heap, (t0 + deadline, tid))
+        if timed_out:
+            for tid, task in timed_out:
                 self.pool.terminate(tid)
                 self.tasks.pop(tid, None)
-                self.send_to_servers(
-                    MsgType.REPORT_HARD_TASK,
-                    {"tid": tid, "hardness": task.hardness().values})
-                self.send_to_servers(MsgType.LOG,
-                                     {"event": "timeout", "tid": tid})
+            # one batched report + one batched LOG for the whole sweep
+            self.send_to_servers(
+                MsgType.REPORT_HARD_TASK,
+                {"reports": [(tid, task.hardness().values)
+                             for tid, task in timed_out]})
+            self.send_to_servers(
+                MsgType.LOG,
+                {"event": "timeout", "tids": [tid for tid, _ in timed_out]})
 
         # 2b. re-send unacknowledged reports (lost to a partition)
-        for _seq, entry in list(self._outbox.items()):
+        for _seq, entry in list(self._outbox.items()) if self._outbox else ():
             msg, t_sent = entry
             if now - t_sent > self.request_retry:
                 self.primary.send(msg)
@@ -152,13 +202,32 @@ class Client:
         if not self.stopped:
             while self.queue and self.pool.idle() > 0:
                 tid = self.queue.popleft()
-                if tid in self.tasks:
-                    self.pool.start(tid, self.tasks[tid])
+                task = self.tasks.get(tid)
+                if task is not None:
+                    self.pool.start(tid, task)
+                    deadline = task.timeout()
+                    if deadline is not None:
+                        heapq.heappush(self._deadline_heap,
+                                       (now + deadline, tid))
+        # sim pools surface STARTED synchronously (drain_started) so the
+        # lifecycle LOG for tasks started *this* step goes out now rather
+        # than one wake later; process pools report via phase 2 instead
+        if self._drain_started is not None:
+            started.extend(self._drain_started())
+        # one combined lifecycle LOG per wake: grant receipts (phase 4)
+        # and worker starts (phase 5) ride the same message
+        if started or self._granted_pending:
+            granted_ack = self._granted_pending
+            self._granted_pending = []
+            self.send_to_servers(MsgType.LOG,
+                                 {"event": "lifecycle",
+                                  "granted": granted_ack,
+                                  "started": started})
 
         # exit condition (pending un-ACKed reports hold the client alive:
         # saying BYE before the server confirmed receipt loses results)
         if self.no_further and not self.queue and not self.tasks \
-                and not self.pool.running() and not self._outbox \
+                and not self._pool_running() and not self._outbox \
                 and not self.finished:
             self.send_to_servers(MsgType.BYE)
             self.finished = True
@@ -178,20 +247,33 @@ class Client:
         next_done = getattr(self.pool, "next_completion", lambda: None)()
         if next_done is not None:
             nxt = min(nxt, next_done)
-        for tid, t0 in self.pool.running().items():
-            task = self.tasks.get(tid)
-            if task is None:
+        # earliest plausible deadline: peek the heap, lazily dropping
+        # entries whose task is gone.  A stale-early entry (re-granted
+        # task) only wakes the client sooner than needed — the sweep
+        # re-verifies and corrects it
+        heap = self._deadline_heap
+        running = self._pool_running() if heap else None
+        while heap:
+            dl, tid = heap[0]
+            if tid not in self.tasks or tid not in running:
+                heapq.heappop(heap)
                 continue
-            deadline = task.timeout()
-            if deadline is not None:
-                # timeout check is strict (now - t0 > deadline)
-                nxt = min(nxt, t0 + deadline + 1e-6)
+            # timeout check is strict (now - t0 > deadline)
+            nxt = min(nxt, dl + 1e-6)
+            break
         return max(nxt, now + 1e-6)
 
     # ------------------------------------------------------------------
     def _buffer_backup(self, msg: Message):
         if msg.type == MsgType.SWAP_QUEUES:
             # arrives on the backup-turned-primary path too; handle directly
+            self._act(msg)
+            return
+        if msg.srv_seq is None and msg.ctrl_seq is None:
+            # counterless plane (ACKs, domino broadcasts): no counter to
+            # match a primary copy against, so act on the mirror
+            # immediately — outbox pops and frontier unions are
+            # idempotent, and buffering would accumulate them forever
             self._act(msg)
             return
         if msg.srv_seq is not None and msg.srv_seq in self._processed_srv_seqs:
@@ -219,8 +301,16 @@ class Client:
                 if m.srv_seq != msg.srv_seq]
         t = msg.type
         if t == MsgType.ACK:
-            self._outbox.pop(msg.body["seq"], None)
+            # single {"seq": n} (backup mirror / unbatched) or coalesced
+            # {"seqs": [...]} (primary's per-wake batch) — both idempotent
+            body = msg.body or {}
+            for seq in body.get("seqs") or (body.get("seq"),):
+                self._outbox.pop(seq, None)
         elif t == MsgType.GRANT_TASKS:
+            # the server may piggyback ACKed seqs on the grant (same-wake
+            # coalescing) — idempotent outbox pops, mirror-safe
+            for seq in msg.body.get("acks") or ():
+                self._outbox.pop(seq, None)
             granted = msg.body["tasks"]   # list[(tid, task)]
             # The server echoes how many tasks the request asked for; a
             # partial grant (fewer tasks than requested) must still settle
@@ -234,24 +324,33 @@ class Client:
                     continue   # re-granted while the original survived
                 self.tasks[tid] = task
                 self.queue.append(tid)
-            self.send_to_servers(
-                MsgType.LOG, {"event": "granted",
-                              "tids": [tid for tid, _ in granted]})
+            # receipt is flushed after phase 5 in the combined
+            # "lifecycle" LOG (one wire message per wake, not per grant)
+            self._granted_pending.extend(tid for tid, _ in granted)
         elif t == MsgType.NO_FURTHER_TASKS:
+            for seq in (msg.body or {}).get("acks") or ():
+                self._outbox.pop(seq, None)
             self.no_further = True
             self.outstanding = 0
         elif t == MsgType.APPLY_DOMINO_EFFECT:
-            h = Hardness(tuple(msg.body["hardness"]))
+            # single {"hardness": (...)} (backup mirror / unbatched) or
+            # coalesced {"hardnesses": [...]} (per-wake batch / gossip
+            # pump) — both idempotent frontier unions
+            body = msg.body or {}
+            hs = [Hardness(tuple(v))
+                  for v in body.get("hardnesses") or (body["hardness"],)]
             for tid in list(self.pool.running()):
                 task = self.tasks.get(tid)
-                if task is not None and task.hardness().geq(h):
+                if task is not None \
+                        and any(task.hardness().geq(h) for h in hs):
                     self.pool.terminate(tid)
                     self.tasks.pop(tid, None)
                     self.send_to_servers(
                         MsgType.LOG, {"event": "dominoed", "tid": tid})
             for tid in list(self.queue):
                 task = self.tasks.get(tid)
-                if task is not None and task.hardness().geq(h):
+                if task is not None \
+                        and any(task.hardness().geq(h) for h in hs):
                     self.queue.remove(tid)
                     self.tasks.pop(tid, None)
         elif t == MsgType.STOP:

@@ -21,6 +21,7 @@ scopes shutdown to a ``with`` block and supports ``snapshot()`` /
 from __future__ import annotations
 
 import dataclasses
+import pickle
 import time as _time
 from dataclasses import dataclass
 
@@ -29,7 +30,7 @@ from repro.core.engine import AbstractEngine
 from repro.core.policy import CostMeter
 from repro.core.scheduler import DONE, PENDING, PRUNED, TIMED_OUT
 from repro.core.server import Server, ServerConfig
-from repro.core.sim import SimCluster
+from repro.core.sim import ShardedSimCluster, SimCluster
 from repro.core.space import ParamSpace, TaskFactory
 from repro.core.task import AbstractTask
 
@@ -226,16 +227,27 @@ class Experiment:
 
     ``chaos`` — simulator-only fault script: :class:`SpotWave`,
     :class:`Partition`, :class:`KillPrimary`, or ``callable(cluster)``.
+
+    ``shards`` — split the run across K independent primary(+backup)
+    scheduler pairs (simulator only): the hardness-sorted task table is
+    partitioned into K contiguous slices, each shard runs its own fleet
+    under the per-shard ``ServerConfig`` (``max_clients`` etc. apply
+    *per shard*), and timed-out hardness frontiers gossip across shards
+    so domino pruning stays global.  ``results()`` returns the merged
+    table in submission order, exactly as ``shards=1`` would.
     """
 
     def __init__(self, space_or_tasks, *, task=None, engine: object = "sim",
                  engine_cfg: dict | None = None, sim: object = None,
                  scale: str = "fixed", budget_cap: float | None = None,
                  backup: bool = False, max_clients: int = 4,
-                 out_dir: str | None = None, chaos=(),
+                 out_dir: str | None = None, chaos=(), shards: int = 1,
                  config: ServerConfig | None = None, **server_cfg):
         self.tasks = self._resolve_tasks(space_or_tasks, task)
         self.engine = engine
+        self.shards = int(shards)
+        if self.shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
         self.engine_cfg = dict(engine_cfg or {})
         if self.engine_cfg and not isinstance(engine, str):
             raise ValueError(
@@ -255,6 +267,19 @@ class Experiment:
                            and engine in ("local", "gce", "tpu")
                            or isinstance(engine, AbstractEngine)):
             raise ValueError("chaos directives require a simulator engine")
+        if self.shards > 1:
+            # sharding is a simulator feature: K Server shells on one
+            # event loop.  Real engines run one scheduler per process.
+            if isinstance(engine, AbstractEngine) or (
+                    isinstance(engine, str)
+                    and engine in ("local", "gce", "tpu")):
+                raise ValueError(
+                    "shards>1 requires the simulator engine "
+                    "(engine='sim')")
+            if self.chaos:
+                raise ValueError(
+                    "chaos directives are not supported with shards>1 "
+                    "yet — script faults via the cluster directly")
         if config is not None:
             overridden = [k for k, v, d in (
                 ("scale", scale, "fixed"), ("budget_cap", budget_cap, None),
@@ -275,6 +300,11 @@ class Experiment:
                 max_clients=max_clients, use_backup=backup,
                 scale_policy=scale, budget_cap=budget_cap,
                 out_dir=out_dir, **server_cfg)
+        if self.shards > 1 and self.config.min_group_size > 0:
+            raise ValueError(
+                "min_group_size retention cannot run per shard (a group "
+                "split across shards would be dropped wrongly) — use "
+                "shards=1 or min_group_size=0")
 
     @staticmethod
     def _resolve_tasks(space_or_tasks, task) -> list:
@@ -312,12 +342,13 @@ class RunHandle:
     def __init__(self, exp: Experiment, resume_blob: bytes | None = None):
         self._exp = exp
         self._resume_blob = resume_blob
-        self._cluster: SimCluster | None = None
+        self._cluster = None       # SimCluster | ShardedSimCluster
         self._server: Server | None = None
         self._engine = None
         self._table = None
         self._started = False
         self._closed = False
+        self._sharded = False
 
     # ------------------------------------------------------------------
     # lazy start
@@ -329,11 +360,34 @@ class RunHandle:
         exp = self._exp
         spec = _engines.make(exp.engine, **exp.engine_cfg) \
             if isinstance(exp.engine, str) else exp.engine
+        # a sharded snapshot carries its own shard count; resuming one
+        # always takes the sharded path, whatever shards= says now
+        resume_state = None
+        if self._resume_blob is not None:
+            resume_state = pickle.loads(self._resume_blob)
+        sharded_blob = isinstance(resume_state, dict) \
+            and "shards" in resume_state
+        sharded = exp.shards > 1 or sharded_blob
         try:
             if exp.chaos and not isinstance(spec, _engines.SimSpec):
                 raise ValueError(
                     "chaos directives require a simulator engine")
-            if isinstance(spec, _engines.SimSpec):
+            if sharded and not isinstance(spec, _engines.SimSpec):
+                raise ValueError(
+                    "shards>1 requires the simulator engine (engine='sim')")
+            if resume_state is not None and exp.shards > 1 \
+                    and not sharded_blob:
+                raise ValueError(
+                    "resume blob is a single-scheduler snapshot — resume "
+                    "with shards=1 (sharding cannot be added on resume)")
+            if sharded:
+                self._sharded = True
+                self._cluster = ShardedSimCluster(
+                    exp.tasks, exp.config, spec.params,
+                    n_shards=exp.shards, _internal=True,
+                    _resume=resume_state if sharded_blob else None)
+                self._engine = self._cluster.engines[0]
+            elif isinstance(spec, _engines.SimSpec):
                 self._cluster = SimCluster(exp.tasks, exp.config,
                                            spec.params, _internal=True)
                 self._engine = self._cluster.engine
@@ -362,9 +416,10 @@ class RunHandle:
 
     # ------------------------------------------------------------------
     @property
-    def cluster(self) -> SimCluster:
-        """The underlying ``SimCluster`` (sim runs only) — the advanced
-        scripting surface (``at``/``partition``/``trace`` ...)."""
+    def cluster(self):
+        """The underlying ``SimCluster``/``ShardedSimCluster`` (sim runs
+        only) — the advanced scripting surface (``at``/``partition``/
+        ``trace`` ...)."""
         self._start()
         if self._cluster is None:
             raise AttributeError("no cluster: this run uses a real engine")
@@ -377,11 +432,25 @@ class RunHandle:
 
     @property
     def server(self) -> Server:
-        """The acting primary server."""
+        """The acting primary server (single-scheduler runs)."""
         self._start()
+        if self._sharded:
+            raise AttributeError(
+                "sharded run: there is no single primary — use "
+                ".shard_servers")
         if self._cluster is not None:
             return self._cluster.acting_primary() or self._cluster.server
         return self._server
+
+    @property
+    def shard_servers(self) -> list[Server]:
+        """The acting primary of every shard, in shard order (sharded
+        runs; a single-scheduler run returns a one-element list)."""
+        self._start()
+        if not self._sharded:
+            return [self.server]
+        acting = self._cluster.acting_primaries()
+        return [acting[k] for k in sorted(acting)]
 
     @property
     def table(self):
@@ -404,6 +473,10 @@ class RunHandle:
         the exploration on a fresh fleet; a later ``results()`` raises
         instead of hanging)."""
         self._start()
+        if self._sharded:
+            yield from self._sharded_sim_events(until, max_steps,
+                                                cost_tick_s)
+            return
         watcher = _RunWatcher(cost_tick_s)
         if self._cluster is not None:
             yield from self._sim_events(watcher, until, max_steps)
@@ -419,6 +492,25 @@ class RunHandle:
             if prim is not None:
                 break
         self._table = prim.final_results
+        yield self._done_event(cl.clock.now())
+
+    def _sharded_sim_events(self, until, max_steps, cost_tick_s):
+        # one watcher per shard: each diffs its own scheduler core and
+        # engine registry, so the merged stream interleaves shard events
+        # in step order
+        cl = self._cluster
+        watchers = [_RunWatcher(cost_tick_s) for _ in range(cl.n_shards)]
+        done = None
+        for done in cl.steps(until=until, max_steps=max_steps):
+            now = cl.clock.now()
+            acting = cl.acting_primaries()
+            for k, w in enumerate(watchers):
+                srv = acting.get(k)
+                if srv is not None:
+                    yield from w.poll(srv, cl.engines[k], now)
+            if done is not None:
+                break
+        self._table = cl.merged_results()
         yield self._done_event(cl.clock.now())
 
     def _real_events(self, watcher, until, poll_sleep):
@@ -469,7 +561,10 @@ class RunHandle:
         if self._table is not None:
             return self._table
         self._start()
-        if self._cluster is not None:
+        if self._sharded:
+            self._cluster.run(until=until, max_steps=max_steps)
+            self._table = self._cluster.merged_results()
+        elif self._cluster is not None:
             prim = self._cluster.run(until=until, max_steps=max_steps)
             self._table = prim.final_results
         else:
@@ -484,16 +579,23 @@ class RunHandle:
     # snapshot / lifecycle
     # ------------------------------------------------------------------
     def snapshot(self) -> bytes:
-        """Structured snapshot of the acting primary's scheduler core —
-        feed to ``Experiment.resume()`` to continue an interrupted run."""
+        """Structured snapshot of the run's scheduler state — feed to
+        ``Experiment.resume()`` to continue an interrupted run.  Sharded
+        runs bundle every shard's core plus the gossip coordinator."""
         self._start()
+        if self._sharded:
+            return self._cluster.serialize_state()
         return self.server.serialize_state()
 
     def shutdown(self):
         if self._closed or self._engine is None:
             return
         self._closed = True
-        self._engine.shutdown()
+        if self._sharded:
+            for eng in self._cluster.engines:
+                eng.shutdown()
+        else:
+            self._engine.shutdown()
 
     def __enter__(self) -> RunHandle:
         self._start()

@@ -38,7 +38,7 @@ class MsgType(enum.Enum):
 _seq = itertools.count()
 
 
-@dataclass
+@dataclass(slots=True)
 class Message:
     type: MsgType
     sender: str

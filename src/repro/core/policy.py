@@ -105,7 +105,8 @@ class BatchBackfillPolicy(AssignPolicy):
 # ---------------------------------------------------------------------------
 @dataclass
 class ScaleDecision:
-    create: int = 0                     # client instances to request (0|1)
+    create: int = 0                     # client instances to request; may
+    #   exceed 1 up to config.create_batch (fleet-scale batched boot)
     terminate: list = field(default_factory=list)   # idle client names
 
 
@@ -117,13 +118,18 @@ class ScalePolicy:
 class FixedFleetPolicy(ScalePolicy):
     """The paper's rule: create while any task is assignable and the fleet
     (alive + booting) is below max_clients; never downscale proactively
-    (clients self-terminate via NO_FURTHER_TASKS -> BYE)."""
+    (clients self-terminate via NO_FURTHER_TASKS -> BYE).  With
+    ``config.create_batch`` > 1 a single tick requests a whole batch —
+    capped by fleet room and by the number of assignable tasks, so a
+    short tail never boots instances with nothing to do."""
 
     def decide(self, core, tick) -> ScaleDecision:
-        create = int(
-            tick.can_create and core.has_assignable()
-            and len(core.clients) + tick.pending_instances
-            < core.config.max_clients)
+        create = 0
+        room = core.config.max_clients \
+            - len(core.clients) - tick.pending_instances
+        if tick.can_create and room > 0 and core.has_assignable():
+            batch = min(room, max(1, getattr(core.config, "create_batch", 1)))
+            create = core.count_assignable(batch) if batch > 1 else 1
         return ScaleDecision(create=create)
 
 
@@ -148,11 +154,16 @@ class DemandScalePolicy(ScalePolicy):
         # only client-kind instances contribute worker capacity — a
         # booting backup server must not suppress client creation
         committed += tick.pending_clients * hint
-        room = (len(core.clients) + tick.pending_clients
-                < core.config.max_clients)
-        create = int(
-            tick.can_create and room
-            and core.count_assignable(committed + 1) > committed)
+        room = core.config.max_clients \
+            - len(core.clients) - tick.pending_clients
+        create = 0
+        if tick.can_create and room > 0:
+            batch = min(room, max(1, getattr(core.config, "create_batch", 1)))
+            # enough assignable work beyond committed capacity to fill
+            # ceil(deficit / hint) more clients, up to the batch cap
+            assignable = core.count_assignable(committed + hint * batch + 1)
+            if assignable > committed:
+                create = min(batch, -(-(assignable - committed) // hint))
         terminate = []
         if not core.has_assignable():
             for cname, ci in core.clients.items():

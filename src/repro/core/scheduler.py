@@ -58,6 +58,10 @@ class ServerConfig:
     idle_timeout_s: float = 5.0        # demand scale: idle-downscale cutoff
     budget_cap: float | None = None    # stop scaling when cap is threatened
     budget_reserve_s: float = 30.0     # projection horizon for the cap
+    create_batch: int = 1              # max CreateInstance effects per tick
+    #   (fleet-scale boot: one create per tick serializes a 10k fleet)
+    name_prefix: str = ""              # instance-name namespace; sharded
+    #   runs give each shard its own prefix so names are globally unique
     # partition hardening (see repro.core.policy.LivenessPolicy):
     partition_grace_s: float = 0.0     # extra liveness allowance while a
     #   client's link is reported partitioned (LinkLost) — a partitioned-
@@ -149,7 +153,7 @@ class Tick:
 # ---------------------------------------------------------------------------
 # typed effects (outputs)
 # ---------------------------------------------------------------------------
-@dataclass
+@dataclass(slots=True)
 class Send:
     client: str
     mtype: MsgType
@@ -195,13 +199,60 @@ class SchedulerCore:
         self._budget_hit = False
         self._last_liveness = -1e18
         self.ctrl_seq = 0           # control-plane broadcast counter
+        # Logical scheduling-event counters (benchmark observability).
+        # Incremented per *item*, never per batch/message, so the primary
+        # (batched wakes) and the backup (one-at-a-time FORWARD replay)
+        # count identically and snapshots stay replay-equivalent:
+        #   granted            task grants issued (incl. re-grants)
+        #   acked              client message seqs acknowledged
+        #   results            RESULT reports processed
+        #   reports            REPORT_HARD_TASK reports processed
+        #   log_entries        client LOG records (batched tids counted)
+        #   domino_deliveries  hardness x client frontier deliveries
+        self.stats = {"granted": 0, "acked": 0, "results": 0,
+                      "reports": 0, "log_entries": 0,
+                      "domino_deliveries": 0}
         self._build_policies()
+        self._init_derived()
 
     def _build_policies(self):
         self.assign_policy = _policy.make_assign_policy(self.config)
         self.scale_policy = _policy.make_scale_policy(self.config)
         self.budget_policy = _policy.make_budget_policy(self.config)
         self.liveness_policy = _policy.make_liveness_policy(self.config)
+
+    def _init_derived(self):
+        """Derived state, rebuilt from ``status`` on both the ``__init__``
+        and ``restore`` paths (like ``_build_policies``): live-task
+        counters that make ``has_assignable``/``count_assignable``/
+        ``_check_done`` O(1) instead of O(tasks).  Exact because every
+        status write goes through ``_set_status`` and eager domino pruning
+        (``_prune_dominated``) guarantees no PENDING/FAILED_POOL task is
+        ever disqualified."""
+        tally = collections.Counter(self.status)
+        self._n_pending = tally[PENDING]
+        self._n_failed = tally[FAILED_POOL]
+        self._n_assigned = tally[ASSIGNED]
+
+    def _set_status(self, tid: int, new: str):
+        """Single funnel for task-status writes, keeping the live-task
+        counters incrementally exact."""
+        old = self.status[tid]
+        if old == new:
+            return
+        self.status[tid] = new
+        if old == PENDING:
+            self._n_pending -= 1
+        elif old == FAILED_POOL:
+            self._n_failed -= 1
+        elif old == ASSIGNED:
+            self._n_assigned -= 1
+        if new == PENDING:
+            self._n_pending += 1
+        elif new == FAILED_POOL:
+            self._n_failed += 1
+        elif new == ASSIGNED:
+            self._n_assigned += 1
 
     # ------------------------------------------------------------------
     # event dispatch (replay entry point)
@@ -222,6 +273,77 @@ class SchedulerCore:
             return self.on_tick(ev)
         raise TypeError(f"unknown scheduler event: {ev!r}")
 
+    def handle_batch(self, events: list) -> list:
+        """Dispatch a burst of events as one wake, coalescing per-client
+        ACK effects into a single ``Send({"seqs": [...]})`` each and
+        per-client domino broadcasts into one ``Send({"hardnesses":
+        [...]})`` each, so effect cost is per-wake, not per-task.  When
+        the same wake also grants to that client (or answers
+        NO_FURTHER_TASKS), the ACK batch piggybacks on that message as
+        ``body["acks"]`` and the separate ACK send is dropped.
+
+        Safe to batch because both planes are *counterless* (no
+        srv_seq/ctrl_seq — idempotent, order-free: outbox pops for ACKs,
+        frontier unions for dominoes): the backup mirror replays
+        FORWARDed messages one at a time and emits unbatched
+        ``{"seq": n}`` / ``{"hardness": (...)}`` forms, and clients
+        accept both shapes without any dedup-counter divergence."""
+        if len(events) == 1:
+            return self.handle(events[0])
+        effects: list = []
+        acks: dict[str, Send] = {}
+        dominoes: dict[str, list] = {}
+        carriers: dict[str, Send] = {}   # per-client ACK piggyback target
+        for ev in events:
+            for eff in self.handle(ev):
+                if isinstance(eff, Send):
+                    mt = eff.mtype
+                    if mt is MsgType.ACK:
+                        prev = acks.get(eff.client)
+                        if prev is None:
+                            # first ACK for this client keeps its place in
+                            # the effect stream and becomes the carrier
+                            eff.body = {"seqs": [eff.body["seq"]]}
+                            acks[eff.client] = eff
+                            effects.append(eff)
+                        else:
+                            prev.body["seqs"].append(eff.body["seq"])
+                        continue
+                    if mt is MsgType.APPLY_DOMINO_EFFECT:
+                        hs = dominoes.get(eff.client)
+                        if hs is None:
+                            eff.body = {"hardnesses": [eff.body["hardness"]]}
+                            dominoes[eff.client] = eff.body["hardnesses"]
+                            effects.append(eff)
+                        else:
+                            hs.append(eff.body["hardness"])
+                        continue
+                    if mt is MsgType.GRANT_TASKS \
+                            or mt is MsgType.NO_FURTHER_TASKS:
+                        carriers.setdefault(eff.client, eff)
+                effects.append(eff)
+        # piggyback: a client that got both an ACK batch and a grant (or
+        # no-further) this wake receives the acked seqs inside that
+        # message instead of a separate ACK — one less message and one
+        # less client wake.  Safe: acks are idempotent outbox pops, and
+        # the backup's mirror (which replays unbatched and never sees the
+        # piggyback) is deduped away by the carrier's srv_seq; a lost
+        # carrier just means the outbox entries retry and re-ACK.
+        dropped = None
+        for cname, ack in acks.items():
+            car = carriers.get(cname)
+            if car is not None:
+                body = car.body
+                if body is None:
+                    body = car.body = {}
+                body["acks"] = ack.body["seqs"]
+                if dropped is None:
+                    dropped = set()
+                dropped.add(id(ack))
+        if dropped:
+            effects = [e for e in effects if id(e) not in dropped]
+        return effects
+
     # ------------------------------------------------------------------
     # assignment helpers (consumed by AssignPolicy implementations)
     # ------------------------------------------------------------------
@@ -233,7 +355,7 @@ class SchedulerCore:
             if self.status[tid] != FAILED_POOL:
                 continue
             if self.min_hard.disqualifies(self.tasks[tid].hardness()):
-                self.status[tid] = PRUNED
+                self._set_status(tid, PRUNED)
                 continue
             return tid, self.tasks[tid]
         return None
@@ -247,39 +369,24 @@ class SchedulerCore:
             if self.status[tid] != PENDING:
                 continue
             if self.min_hard.disqualifies(self.tasks[tid].hardness()):
-                self.status[tid] = PRUNED
+                self._set_status(tid, PRUNED)
                 continue
             return tid, self.tasks[tid]
         return None
 
     def has_assignable(self) -> bool:
-        if any(self.status[t] == FAILED_POOL for t in self.tasks_from_failed):
-            return True
-        return any(
-            self.status[tid] == PENDING
-            and not self.min_hard.disqualifies(self.tasks[tid].hardness())
-            for tid in range(self.next_ptr, len(self.tasks)))
+        """O(1): eager domino pruning (``_prune_dominated``) keeps the
+        invariant that no PENDING or FAILED_POOL task is disqualified, so
+        the prune-aware live counters answer directly — no scan over
+        ``range(next_ptr, len(tasks))`` (the old O(tasks)-per-tick cost
+        that capped the fleet size)."""
+        return self._n_failed > 0 or self._n_pending > 0
 
     def count_assignable(self, bound: int) -> int:
-        """Number of currently grantable tasks, counted up to ``bound``
-        (early exit keeps scale-policy ticks O(bound)).  Pure query: does
-        not mark pruned tasks."""
-        c = 0
-        for tid in self.tasks_from_failed:
-            if self.status[tid] == FAILED_POOL \
-                    and not self.min_hard.disqualifies(
-                        self.tasks[tid].hardness()):
-                c += 1
-                if c >= bound:
-                    return c
-        for tid in range(self.next_ptr, len(self.tasks)):
-            if self.status[tid] == PENDING \
-                    and not self.min_hard.disqualifies(
-                        self.tasks[tid].hardness()):
-                c += 1
-                if c >= bound:
-                    return c
-        return c
+        """Number of currently grantable tasks, counted up to ``bound``.
+        Pure O(1) query on the prune-aware counters: every PENDING /
+        FAILED_POOL task is grantable (see ``has_assignable``)."""
+        return min(bound, self._n_failed + self._n_pending)
 
     # ------------------------------------------------------------------
     # client lifecycle
@@ -335,12 +442,12 @@ class SchedulerCore:
         if reassign:
             for tid in ci.assigned:
                 if self.status[tid] == ASSIGNED:
-                    self.status[tid] = FAILED_POOL
+                    self._set_status(tid, FAILED_POOL)
                     self.tasks_from_failed.append(tid)
         return [TerminateInstance(cname, reason)]
 
     def alloc_instance_name(self, prefix: str) -> str:
-        name = f"{prefix}-{self._client_counter}"
+        name = f"{self.config.name_prefix}{prefix}-{self._client_counter}"
         self._client_counter += 1
         return name
 
@@ -369,7 +476,8 @@ class SchedulerCore:
         ci = self.clients.get(cname)
         if ci is None:
             return []
-        ci.last_client_seq = max(ci.last_client_seq, msg.seq)
+        if msg.seq > ci.last_client_seq:
+            ci.last_client_seq = msg.seq
         t = msg.type
         eff: list = []
         if t == MsgType.HEALTH_UPDATE:
@@ -389,8 +497,9 @@ class SchedulerCore:
             granted = self.assign_policy.select(self, n)
             if granted or regrant:
                 ci.last_active = now
+                self.stats["granted"] += len(regrant) + len(granted)
                 for tid, task in granted:
-                    self.status[tid] = ASSIGNED
+                    self._set_status(tid, ASSIGNED)
                     ci.assigned[tid] = task
                 for tid, _ in regrant + granted:
                     ci.unacked[tid] = now
@@ -404,47 +513,110 @@ class SchedulerCore:
         elif t == MsgType.RESULT:
             # state-bearing reports are ACKed (by client message seq) so
             # the client can drop them from its at-least-once outbox —
-            # processing below is idempotent, so duplicates just re-ACK
-            eff.append(self._send(ci, MsgType.ACK, {"seq": msg.seq}))
-            tid = msg.body["tid"]
+            # processing below is idempotent, so duplicates just re-ACK.
+            # ACKs are counterless (no srv_seq): order-free idempotent
+            # pops need no dedup, and keeping them off the per-client
+            # counter lets handle_batch coalesce them per wake without
+            # desyncing the backup mirror's srv_seq state.
+            eff.append(Send(ci.name, MsgType.ACK, {"seq": msg.seq}))
+            self.stats["acked"] += 1
+            # clients batch a wake's completions into one message
+            # ({"results": [[tid, result], ...]}); the single-tid form is
+            # kept for older traces and per-task senders
+            body = msg.body
+            items = body.get("results") \
+                or ((body["tid"], body["result"]),)
             ci.last_active = now
-            ci.unacked.pop(tid, None)
-            # Only ASSIGNED tasks may complete: a racy late result for a
-            # task already TIMED_OUT/PRUNED (domino effect) or already DONE
-            # (duplicate copy after takeover) must not corrupt the table.
-            started = self._task_started.pop(tid, None)
-            if self.status[tid] == ASSIGNED:
-                self.results[tid] = tuple(msg.body["result"])
-                self.status[tid] = DONE
-                t0 = started[1] if started is not None else now
-                self.task_spans[tid] = (cname, t0, now)
-            ci.assigned.pop(tid, None)
+            # the "done" lifecycle log entry is synthesized here rather
+            # than shipped as a separate client LOG message — the RESULT
+            # batch already names exactly the completed tids
+            self.events.log(cname, now, "LOG",
+                            {"event": "done",
+                             "tids": [tid for tid, _ in items]})
+            self.stats["log_entries"] += len(items)
+            for tid, result in items:
+                self.stats["results"] += 1
+                ci.unacked.pop(tid, None)
+                # Only ASSIGNED tasks may complete: a racy late result for
+                # a task already TIMED_OUT/PRUNED (domino effect) or
+                # already DONE (duplicate copy after takeover) must not
+                # corrupt the table.
+                started = self._task_started.pop(tid, None)
+                if self.status[tid] == ASSIGNED:
+                    self.results[tid] = tuple(result)
+                    self._set_status(tid, DONE)
+                    t0 = started[1] if started is not None else now
+                    self.task_spans[tid] = (cname, t0, now)
+                ci.assigned.pop(tid, None)
         elif t == MsgType.REPORT_HARD_TASK:
-            eff.append(self._send(ci, MsgType.ACK, {"seq": msg.seq}))
-            tid = msg.body["tid"]
-            h = Hardness(tuple(msg.body["hardness"]))
-            self.status[tid] = TIMED_OUT
-            ci.assigned.pop(tid, None)
-            ci.unacked.pop(tid, None)
+            eff.append(Send(ci.name, MsgType.ACK, {"seq": msg.seq}))
+            self.stats["acked"] += 1
+            # clients batch a timeout sweep into one message
+            # ({"reports": [[tid, hardness], ...]}); single-tid form kept
+            # for older traces and per-task senders
+            body = msg.body
+            items = body.get("reports") \
+                or ((body["tid"], body["hardness"]),)
             ci.last_active = now
-            self._task_started.pop(tid, None)
-            self.min_hard.add(h)
-            self._apply_domino(h)
-            for other in self.clients.values():
-                eff.append(self._send(other, MsgType.APPLY_DOMINO_EFFECT,
-                                      {"hardness": h.values}))
+            for tid, hv in items:
+                self.stats["reports"] += 1
+                h = Hardness(tuple(hv))
+                self._set_status(tid, TIMED_OUT)
+                ci.assigned.pop(tid, None)
+                ci.unacked.pop(tid, None)
+                self._task_started.pop(tid, None)
+                if self._absorb_hardness(h):
+                    # broadcast only when the frontier actually grew: a
+                    # dominated report h (some stored m <= h) prunes
+                    # nothing new — by transitivity every task T >= h is
+                    # also >= m and m's earlier broadcast already covered
+                    # it (FIFO wires guarantee clients saw it).  At fleet
+                    # scale dominated reports are the common case, so
+                    # skipping the O(clients) fan-out here is what keeps
+                    # timeouts cheap.
+                    # Counterless like ACKs (no srv_seq/ctrl_seq):
+                    # applying a hardness to a client's local queue is an
+                    # idempotent, order-free frontier union, so no dedup
+                    # counter is needed and handle_batch may coalesce a
+                    # wake's broadcasts into one {"hardnesses": [...]}
+                    # message per client.
+                    self.stats["domino_deliveries"] += len(self.clients)
+                    for other in self.clients.values():
+                        eff.append(Send(other.name,
+                                        MsgType.APPLY_DOMINO_EFFECT,
+                                        {"hardness": h.values}))
         elif t == MsgType.LOG:
             self.events.log(cname, now, "LOG", msg.body)
             body = msg.body or {}
-            if body.get("event") == "started" and "tid" in body:
-                self._task_started[body["tid"]] = (cname, now)
-                ci.unacked.pop(body["tid"], None)
-            elif body.get("event") == "granted":
-                # the client acknowledged receipt of these grants
-                for tid in body.get("tids", ()):
+            ev_name = body.get("event")
+            if ev_name == "lifecycle":
+                # per-wake combined form: grant receipts + worker starts
+                # in one wire message ({"granted": [...], "started": [...]})
+                granted = body.get("granted") or ()
+                started = body.get("started") or ()
+                self.stats["log_entries"] += len(granted) + len(started)
+                for tid in granted:
                     ci.unacked.pop(tid, None)
+                for tid in started:
+                    self._task_started[tid] = (cname, now)
+                    ci.unacked.pop(tid, None)
+            else:
+                self.stats["log_entries"] += len(body.get("tids") or ()) or 1
+                if ev_name == "started":
+                    # legacy per-event form ({"tids": [...]} batched, or
+                    # single-tid from older traces)
+                    tids = body.get("tids") if "tids" in body else (
+                        (body["tid"],) if "tid" in body else ())
+                    for tid in tids:
+                        self._task_started[tid] = (cname, now)
+                        ci.unacked.pop(tid, None)
+                elif ev_name == "granted":
+                    # the client acknowledged receipt of these grants
+                    for tid in body.get("tids", ()):
+                        ci.unacked.pop(tid, None)
         elif t == MsgType.EXCEPTION:
-            eff.append(self._send(ci, MsgType.ACK, {"seq": msg.seq}))
+            eff.append(Send(ci.name, MsgType.ACK, {"seq": msg.seq}))
+            self.stats["acked"] += 1
             self.events.log(cname, now, "EXCEPTION", msg.body)
             tid = (msg.body or {}).get("tid")
             if tid is not None and self.status[tid] == ASSIGNED:
@@ -455,10 +627,10 @@ class SchedulerCore:
                 self.attempts[tid] = self.attempts.get(tid, 1) + 1
                 if self.attempts[tid] > self.config.max_task_attempts:
                     # poison task: stop retrying (would livelock otherwise)
-                    self.status[tid] = PRUNED
+                    self._set_status(tid, PRUNED)
                 else:
                     # worker crash: send the task back to the pool
-                    self.status[tid] = FAILED_POOL
+                    self._set_status(tid, FAILED_POOL)
                     self.tasks_from_failed.append(tid)
         elif t == MsgType.BYE:
             self.events.log(cname, now, "LOG", {"event": "bye"})
@@ -468,17 +640,67 @@ class SchedulerCore:
             eff += self.drop_client(cname, now, reassign=True, reason="bye")
         return eff
 
+    def _absorb_hardness(self, h: Hardness) -> bool:
+        """Record a timed-out hardness; when it grows the pruning frontier
+        apply the domino rule eagerly to assigned AND live (pending /
+        failed-pool) tasks.  Returns True iff the frontier grew (callers
+        broadcast APPLY_DOMINO_EFFECT only then).  Eager pruning is what
+        keeps the live-task counters prune-aware: after this returns, no
+        PENDING/FAILED_POOL task is disqualified."""
+        if not self.min_hard.add(h):
+            return False
+        self._apply_domino(h)
+        self._prune_dominated(h)
+        return True
+
+    def gossip_hardness(self, hs) -> tuple[list, list]:
+        """Cross-shard domino (``core.shard``): absorb a batch of
+        hardnesses observed by other shards' schedulers.  The client
+        notification is counterless (no srv_seq/ctrl_seq — frontier
+        unions are idempotent and order-free, like the ACK plane), so
+        one gossip pump costs one message per client no matter how many
+        frontier elements it delivered, and no counter state can diverge
+        between primary and backup (the PR-4 bug class).  Returns
+        ``(retained_values, effects)``; the shell replicates the retained
+        values to the backup via the BROADCAST notice — gossip never
+        arrives as a FORWARDable client message, so that notice is its
+        only path into the mirror."""
+        retained = [h.values for h in hs if self._absorb_hardness(h)]
+        if not retained:
+            return [], []
+        self.stats["domino_deliveries"] += len(retained) * len(self.clients)
+        return retained, [
+            Send(ci.name, MsgType.APPLY_DOMINO_EFFECT,
+                 {"hardnesses": list(retained)})
+            for ci in self.clients.values()]
+
     def _apply_domino(self, h: Hardness):
-        """Mark all assigned/pending tasks dominated by h as pruned (their
+        """Mark all assigned tasks dominated by h as pruned (their
         clients are terminating them; results will never arrive)."""
         for ci in self.clients.values():
             for tid in list(ci.assigned):
                 if self.tasks[tid].hardness().geq(h):
                     if self.status[tid] == ASSIGNED:
-                        self.status[tid] = PRUNED
+                        self._set_status(tid, PRUNED)
                     ci.assigned.pop(tid, None)
                     ci.unacked.pop(tid, None)
                     self._task_started.pop(tid, None)
+
+    def _prune_dominated(self, h: Hardness):
+        """Eagerly prune live tasks dominated by a frontier-growing h.
+        The old lazy scheme left them PENDING/FAILED_POOL until a grant
+        scan or the completion sweep touched them, which forced every
+        has_assignable/count_assignable call to re-check disqualification
+        across the whole table.  One O(live) sweep per *retained* frontier
+        element (rare) buys O(1) for every hot-path query."""
+        for tid in range(self.next_ptr, len(self.tasks)):
+            if self.status[tid] == PENDING \
+                    and self.tasks[tid].hardness().geq(h):
+                self._set_status(tid, PRUNED)
+        for tid in self.tasks_from_failed:
+            if self.status[tid] == FAILED_POOL \
+                    and self.tasks[tid].hardness().geq(h):
+                self._set_status(tid, PRUNED)
 
     # ------------------------------------------------------------------
     # periodic decisions (scaling, liveness, completion)
@@ -501,8 +723,12 @@ class SchedulerCore:
                          "cap": self.budget_policy.cap,
                          "accrued": tick.accrued_cost})
             else:
-                eff.append(CreateInstance(
-                    "client", self.alloc_instance_name("client")))
+                # decision.create may be > 1 (config.create_batch): one
+                # tick boots a whole batch instead of serializing fleet
+                # bring-up at one instance per tick
+                for _ in range(decision.create):
+                    eff.append(CreateInstance(
+                        "client", self.alloc_instance_name("client")))
         # 2. terminate unhealthy clients (+ requeue their tasks).  Health
         #    state only changes at heartbeat granularity, so the O(clients)
         #    sweep runs at health_interval cadence, not every tick — with
@@ -536,12 +762,15 @@ class SchedulerCore:
     def _check_done(self):
         if self.done:
             return
-        if any(s == ASSIGNED for s in self.status) or self.has_assignable():
+        # O(1) per tick on the live counters (was an O(tasks) any()-scan)
+        if self._n_assigned > 0 or self.has_assignable():
             return
-        # no assignable work, nothing in flight: sweep survivors
+        # no assignable work, nothing in flight: sweep survivors (the
+        # counters say there are none, but the sweep stays as a guard for
+        # snapshots predating eager pruning); runs at most once
         for tid, s in enumerate(self.status):
             if s in (PENDING, FAILED_POOL):
-                self.status[tid] = PRUNED
+                self._set_status(tid, PRUNED)
         self.done = True
 
     # ------------------------------------------------------------------
@@ -576,6 +805,7 @@ class SchedulerCore:
             "budget_hit": self._budget_hit,
             "last_liveness": self._last_liveness,
             "ctrl_seq": self.ctrl_seq,
+            "stats": dict(self.stats),
         }
 
     @classmethod
@@ -609,5 +839,9 @@ class SchedulerCore:
         core._budget_hit = snap["budget_hit"]
         core._last_liveness = snap["last_liveness"]
         core.ctrl_seq = snap.get("ctrl_seq", 0)
+        core.stats = dict(snap.get("stats") or {
+            "granted": 0, "acked": 0, "results": 0, "reports": 0,
+            "log_entries": 0, "domino_deliveries": 0})
         core._build_policies()
+        core._init_derived()
         return core

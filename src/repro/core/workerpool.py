@@ -18,6 +18,8 @@ class WorkerEvent:
     DONE = "WORKER_DONE"
     ERROR = "WORKER_ERROR"
 
+    __slots__ = ("kind", "task_id", "payload")
+
     def __init__(self, kind, task_id, payload=None):
         self.kind = kind
         self.task_id = task_id
@@ -46,6 +48,11 @@ class ProcessWorkerPool:
 
     def running(self) -> dict[int, float]:
         return dict(self._started)
+
+    def running_ref(self) -> dict[int, float]:
+        """Internal start-time map, NOT copied — read-only view for hot
+        paths that only scan (the client's per-step timeout sweep)."""
+        return self._started
 
     def start(self, task_id: int, task) -> None:
         p = mp.Process(target=_worker_main, args=(task_id, task, self._q),
@@ -103,6 +110,8 @@ class SimWorkerPool:
         self.n_workers = n_workers
         self._clock = clock
         self._running: dict[int, tuple] = {}   # id -> (task, start, end)
+        self._running_view: dict | None = None  # lazy running_ref() cache
+        self._next_end: float | None = None     # lazy min-end cache
         self._pending_started: list[int] = []
         self.notify = notify
         self.runtime_fn = runtime_fn
@@ -113,12 +122,23 @@ class SimWorkerPool:
     def running(self) -> dict[int, float]:
         return {tid: t0 for tid, (_, t0, _) in self._running.items()}
 
+    def running_ref(self):
+        """Read-only {tid: t0} view for hot paths.  Built lazily and
+        invalidated on every start/terminate/poll-completion — the
+        client's per-step sweeps would otherwise rebuild the dict three
+        times per wake."""
+        if self._running_view is None:
+            self._running_view = {tid: t0 for tid, (_, t0, _)
+                                  in self._running.items()}
+        return self._running_view
+
     def next_completion(self) -> float | None:
         """Earliest scheduled completion time, or None when idle (used by
-        the client's next_wake hint)."""
-        if not self._running:
-            return None
-        return min(end for _, _, end in self._running.values())
+        the client's next_wake hint and poll()'s nothing-due fast path).
+        Cached; invalidated whenever the running set changes."""
+        if self._next_end is None and self._running:
+            self._next_end = min(end for _, _, end in self._running.values())
+        return self._next_end
 
     def start(self, task_id: int, task) -> None:
         now = self._clock.now()
@@ -126,29 +146,57 @@ class SimWorkerPool:
         if self.runtime_fn is not None:
             dur = self.runtime_fn(task_id, dur)
         self._running[task_id] = (task, now, now + dur)
+        self._running_view = None
+        if self._next_end is not None and now + dur < self._next_end:
+            self._next_end = now + dur
         self._pending_started.append(task_id)
         if self.notify is not None:
-            self.notify(now)            # emit STARTED promptly
-            self.notify(now + dur)      # wake at completion
+            # completion wake only: the client drains STARTED events
+            # synchronously via drain_started() in the same step that
+            # started the workers, so no extra wake is needed for them
+            self.notify(now + dur)
+
+    def drain_started(self) -> list[int]:
+        """Pop and return tids whose STARTED event is pending — called by
+        the client right after starting workers so the lifecycle LOG goes
+        out in the same step instead of one wake later."""
+        out = self._pending_started
+        self._pending_started = []
+        return out
 
     def poll(self) -> list[WorkerEvent]:
+        now = self._clock.now()
+        if not self._pending_started:
+            # nothing-due fast path: most wakes deliver messages, not
+            # completions — skip the running-set scan entirely
+            nxt = self.next_completion()
+            if nxt is None or now < nxt:
+                return []
         events = [WorkerEvent(WorkerEvent.STARTED, tid)
                   for tid in self._pending_started]
         self._pending_started.clear()
-        now = self._clock.now()
+        completed = False
         for tid, (task, _t0, t_end) in list(self._running.items()):
             if now >= t_end:
+                completed = True
                 del self._running[tid]
+                self._running_view = None
                 try:
                     result = task.run()
                 except BaseException as e:  # noqa: BLE001
                     events.append(WorkerEvent(WorkerEvent.ERROR, tid, str(e)))
                 else:
                     events.append(WorkerEvent(WorkerEvent.DONE, tid, result))
+        if completed:
+            self._next_end = None
         return events
 
     def terminate(self, task_id: int) -> None:
         self._running.pop(task_id, None)
+        self._running_view = None
+        self._next_end = None
 
     def shutdown(self):
         self._running.clear()
+        self._running_view = None
+        self._next_end = None

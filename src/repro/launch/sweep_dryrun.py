@@ -60,6 +60,17 @@ def main(argv=None):
     ap.add_argument("--budget-cap", type=float, default=None,
                     help="stop creating instances when the projected spend "
                          "(wall-clock-proxy instance-seconds) nears the cap")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="split the sweep across K scheduler shards on the "
+                         "virtual-clock simulator (cells still execute, at "
+                         "their virtual completion instants, modelled as "
+                         "--sim-cell-s seconds each); per-shard CostMeter "
+                         "summaries are merged into one ResultsTable cost "
+                         "account.  shards=1 keeps the local engine")
+    ap.add_argument("--sim-cell-s", type=float, default=60.0,
+                    help="virtual seconds one cell occupies a worker in the "
+                         "sharded (simulator) schedule, for makespan/cost "
+                         "accounting")
     args = ap.parse_args(argv)
 
     meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
@@ -80,16 +91,38 @@ def main(argv=None):
         scale_policy=args.scale,
         budget_cap=args.budget_cap,
     )
-    exp = Experiment(tasks, engine="local",
-                     engine_cfg={"n_workers_per_client": 1}, config=config)
+    if args.shards > 1:
+        # sharded sweep: K scheduler shards on one virtual clock.  Cells
+        # still execute (the simulated worker pool runs each task at its
+        # virtual completion instant); the clock models every cell as
+        # --sim-cell-s seconds, so makespan and the merged cost summary
+        # are schedule estimates, not wall measurements
+        import dataclasses
+
+        from repro.core.sim import SimParams
+        for t in tasks:
+            t.sim_duration = args.sim_cell_s
+        # per-shard servers must not race on one out_dir (each would
+        # write its partial table over the others') — the merged table
+        # below is the authoritative sharded output
+        config = dataclasses.replace(config, out_dir=None)
+        exp = Experiment(tasks, engine="sim",
+                         sim=SimParams(client_workers=1, seed=0),
+                         shards=args.shards, config=config)
+    else:
+        exp = Experiment(tasks, engine="local",
+                         engine_cfg={"n_workers_per_client": 1},
+                         config=config)
     t0 = time.time()
     with exp.run() as run:
         table = run.results(poll_sleep=0.2)
     print(f"[sweep] done in {time.time()-t0:.0f}s")
     print(table.to_csv())
     if table.cost is not None:
+        shard_note = f", {args.shards} shards" if args.shards > 1 else ""
         print(f"[sweep] cost: {table.cost['total']:.0f} instance-seconds "
-              f"(wall-clock proxy, {table.cost['instances']} instances)")
+              f"(wall-clock proxy, {table.cost['instances']} instances"
+              f"{shard_note})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,40 @@
+"""Bad fixture: ShardCoordinator that forgets gossip state on resume
+and reads the wall clock inside the pure meta-scheduling core."""
+import time
+
+
+class ShardCoordinator:
+    def __init__(self, n_shards):
+        self.n_shards = n_shards
+        self.seen = set()
+        self.pending = [[] for _ in range(n_shards)]
+        self.last_pump_at = time.time()   # purity: wall-clock read
+
+    def observe(self, shard_id, frontier_values):
+        fresh = []
+        for hv in frontier_values:
+            hv = tuple(hv)
+            if hv in self.seen:
+                continue
+            self.seen.add(hv)
+            fresh.append(hv)
+            for j in range(self.n_shards):
+                if j != shard_id:
+                    self.pending[j].append(hv)
+        return fresh
+
+    def snapshot(self):
+        # BUG: "pending" and "last_pump_at" are missing — queued gossip
+        # deliveries are silently dropped on resume, so a shard that was
+        # owed a pruning frontier never receives it
+        return {
+            "n_shards": self.n_shards,
+            "seen": sorted(self.seen),
+        }
+
+    @classmethod
+    def restore(cls, snap):
+        coord = cls.__new__(cls)
+        coord.n_shards = snap["n_shards"]
+        coord.seen = {tuple(hv) for hv in snap["seen"]}
+        return coord

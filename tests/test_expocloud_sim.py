@@ -97,5 +97,7 @@ def test_easiest_first_assignment():
     for client in ("client-0",):
         for e in events.for_client(client):
             if e["kind"] == "LOG" and e["body"].get("event") == "done":
-                done_order.append(e["body"]["tid"])
+                # clients batch lifecycle LOGs per wake ({"tids": [...]})
+                done_order.extend(e["body"].get("tids")
+                                  or [e["body"]["tid"]])
     assert done_order == sorted(done_order)

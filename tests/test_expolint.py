@@ -20,7 +20,17 @@ CASES = [
     ("snapshot_bad", "snapshot-completeness", "snapshot()"),
     ("seq_bad", "seq-discipline", "srv_seq"),
     ("pallas_bad", "pallas-rules", "divisibility"),
+    ("shard_bad", "snapshot-completeness", "snapshot()"),
+    ("shard_bad", "core-purity", "wall-clock"),
 ]
+
+
+def test_shard_bad_names_both_missing_fields():
+    messages = " | ".join(
+        v.message for v in run_checks(FIXTURES / "shard_bad",
+                                      rules=["snapshot-completeness"]))
+    assert "self.pending" in messages       # missing from snapshot()
+    assert "self.last_pump_at" in messages  # missing from both sites
 
 
 @pytest.mark.parametrize("case,rule,fragment", CASES)

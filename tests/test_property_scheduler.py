@@ -6,9 +6,11 @@ pytest.importorskip(
     "hypothesis", reason="property tests need hypothesis (requirements-dev)")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core.hardness import Hardness
+from test_shard import NaiveMinHardSet  # noqa: E402
+
+from repro.core.hardness import Hardness, MinHardSet
 from repro.core.server import ServerConfig
-from repro.core.sim import SimCluster, SimParams, SimTask
+from repro.core.sim import ShardedSimCluster, SimCluster, SimParams, SimTask
 
 task_strategy = st.tuples(
     st.integers(0, 4),                    # hardness a
@@ -73,3 +75,67 @@ def test_invariants_hold_under_client_failure(specs, kill_at, max_clients):
     # no deadline -> every task must eventually be solved despite the crash
     assert all(s == "done" for _, _, s in srv.final_results.rows)
     assert len(srv.results) == len(tasks)
+
+
+hardness_strategy = st.tuples(st.integers(0, 6), st.integers(0, 6),
+                              st.integers(0, 6))
+
+
+@given(st.lists(hardness_strategy, min_size=1, max_size=120),
+       st.lists(hardness_strategy, min_size=1, max_size=30))
+@settings(max_examples=50, deadline=None)
+def test_indexed_minhardset_equals_naive_reference(adds, probes):
+    indexed, naive = MinHardSet(), NaiveMinHardSet()
+    for hv in adds:
+        h = Hardness(hv)
+        assert indexed.add(h) == naive.add(h), hv
+    assert indexed.snapshot() == naive.snapshot()
+    for hv in probes:
+        h = Hardness(hv)
+        assert indexed.disqualifies(h) == naive.disqualifies(h), hv
+    # snapshot -> restore preserves both the frontier order and answers
+    restored = MinHardSet()
+    restored.restore(indexed.snapshot())
+    assert restored.snapshot() == indexed.snapshot()
+    for hv in probes:
+        h = Hardness(hv)
+        assert restored.disqualifies(h) == naive.disqualifies(h), hv
+
+
+@given(st.integers(2, 6),                  # grid side a
+       st.integers(2, 6),                  # grid side b
+       st.floats(0.15, 0.4),               # per-unit duration
+       st.floats(0.5, 3.0),                # deadline
+       st.integers(2, 4))                  # shards
+@settings(max_examples=10, deadline=None)
+def test_sharded_pruning_equals_single_scheduler(na, nb, base, deadline,
+                                                 n_shards):
+    # durations monotone in hardness: the solved set is exactly
+    # {dur <= deadline} for any shard count, so K shards with gossiped
+    # frontiers must match the single scheduler set-for-set
+    def grid():
+        return [SimTask((a, b), ("a", "b"), (a, b), base * (a + b + 1),
+                        deadline, (a * b,))
+                for a in range(na) for b in range(nb)]
+
+    single = SimCluster(grid(), ServerConfig(max_clients=3,
+                                             use_backup=False),
+                        SimParams(), _internal=True)
+    t1 = single.run(until=4000).final_results
+    sharded = ShardedSimCluster(grid(),
+                                ServerConfig(max_clients=2,
+                                             use_backup=False),
+                                SimParams(), n_shards=n_shards,
+                                _internal=True)
+    sharded.run(until=4000)
+    tk = sharded.merged_results()
+
+    def sets(table):
+        solved = {p for p, r, s in table.rows if s == "done"}
+        gone = {p for p, r, s in table.rows
+                if s in ("pruned", "timed_out")}
+        return solved, gone
+
+    assert sets(tk) == sets(t1)
+    params = [p for p, _, _ in tk.rows]
+    assert len(params) == len(set(params)) == na * nb
