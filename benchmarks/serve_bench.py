@@ -1,0 +1,309 @@
+"""Serving fast-path benchmark: fused on-device decode loop vs per-step
+host sync, sequential-force vs chunked prefill, and the decode-attention
+kernel, under a seeded Poisson many-user request trace.
+
+Sections (all on a CPU-sized 2-layer config so dispatch/host-sync overhead
+— the thing the fused loop removes — dominates over model compute):
+
+* ``throughput``: same greedy workload through ``mode="host"`` (the seed
+  engine's per-step-host-sync cost profile: one decode dispatch, a full
+  logits device->host transfer and per-slot python sampling per token)
+  and ``mode="fused"`` (sampling + slot bookkeeping inside one jitted
+  ``lax.scan``, one host sync per ``steps_per_sync`` steps).  Batched
+  greedy outputs are asserted byte-identical to each request decoded
+  alone, sequentially (continuous-batching invariance — slot contents
+  never leak across slots); ``--smoke`` asserts the >= 5x tokens/sec
+  floor through ``retry_measurement``.  Host-vs-fused outputs are *not*
+  byte-compared: they are different XLA programs, and XLA does not
+  guarantee bitwise-identical bf16 logits across program boundaries, so
+  near-tie argmax rows may legitimately flip.
+* ``prefill``: long prompts via sequential one-token-per-step forcing vs
+  ``prefill_chunk`` batched admission (identical outputs asserted),
+  recording decode steps, wall time and time-to-first-token.
+* ``poisson_trace``: wall-clock replay of a seeded Poisson arrival trace
+  with mixed prompt/output lengths; tokens/sec and p50/p99 inter-token
+  gaps.  The fused engine observes tokens in ``steps_per_sync`` bursts,
+  so its p99 gap reflects sync quantisation — the artifact records it
+  rather than hiding it.
+* ``decode_kernel``: the Sq=1 Pallas decode kernel (interpret mode)
+  against the pure-jnp reference on a ragged GQA batch with non-dividing
+  Sk, plus XLA-path timing.
+
+Results land in BENCH_serve.json at the repo root.
+
+Usage:
+    PYTHONPATH=src python benchmarks/serve_bench.py [--smoke] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import jax                                           # noqa: E402
+import numpy as np                                   # noqa: E402
+
+from sim_scale_bench import retry_measurement        # noqa: E402
+
+from repro.configs import reduced_config             # noqa: E402
+from repro.configs.registry import with_segment_counts  # noqa: E402
+from repro.models import lm                          # noqa: E402
+from repro.models.params import init_params          # noqa: E402
+from repro.serve.engine import DecodeEngine, Request  # noqa: E402
+from repro.serve.trace import poisson_trace          # noqa: E402
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ARCH = "smollm-360m"
+MAX_SEQ = 128
+SLOTS = 4
+
+
+def _cfg_params():
+    cfg = with_segment_counts(reduced_config(ARCH), [2])
+    params = init_params(lm.make_lm(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _workload(cfg, n, *, seed=7, plen=(5, 12), max_new=16):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        L = int(rng.integers(plen[0], plen[1] + 1))
+        out.append((rng.integers(0, cfg.vocab_size, L).astype(np.int32),
+                    max_new))
+    return out
+
+
+def _run(cfg, params, work, **engine_kw):
+    eng = DecodeEngine(cfg, params, max_seq=MAX_SEQ, **engine_kw)
+    reqs = [Request(prompt=p, max_new_tokens=m) for p, m in work]
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    steps = eng.run_until_drained()
+    wall = time.perf_counter() - t0
+    toks = sum(len(r.output) for r in reqs)
+    outputs = [[int(np.asarray(t)) for t in r.output] for r in reqs]
+    return {"tokens": toks, "steps": steps, "wall_s": round(wall, 4),
+            "tok_s": round(toks / wall, 2)}, outputs
+
+
+def _warmup(cfg, params, *, plen=(5, 12), **engine_kw):
+    # prompts must be long enough to exercise every program the timed run
+    # will hit (e.g. a full prefill chunk), or compilation lands in-region
+    _run(cfg, params, _workload(cfg, 2, seed=1, plen=plen, max_new=3),
+         **engine_kw)
+
+
+# ---------------------------------------------------------------------------
+# throughput: host-sync-per-step vs fused loop
+# ---------------------------------------------------------------------------
+def bench_throughput(out, cfg, params, *, smoke: bool):
+    n = 12 if smoke else 24
+    work = _workload(cfg, n, plen=(4, 8), max_new=24)
+    _warmup(cfg, params, mode="host", batch_slots=SLOTS)
+    _warmup(cfg, params, mode="fused", batch_slots=SLOTS, steps_per_sync=16)
+
+    def measure():
+        host, _ = _run(cfg, params, work, mode="host", batch_slots=SLOTS)
+        fused, out_f = _run(cfg, params, work, mode="fused",
+                            batch_slots=SLOTS, steps_per_sync=16)
+        return {"host": host, "fused": fused,
+                "speedup": round(fused["tok_s"] / host["tok_s"], 2),
+                "outputs": out_f}
+
+    rec = measure()
+    if smoke:
+        rec = retry_measurement(
+            out, "fused_speedup", rec, measure,
+            accept=lambda r: r["speedup"] >= 5.0,
+            best=lambda a, b: a if a["speedup"] >= b["speedup"] else b,
+            retries=2)
+        assert rec["speedup"] >= 5.0, \
+            f"fused loop speedup {rec['speedup']}x < 5x floor"
+
+    # continuous-batching invariance: batched greedy == each request decoded
+    # alone, one after another, through the same fused program (same engine
+    # geometry, so slot isolation is the only thing under test — not
+    # cross-program fp reproducibility, which XLA does not promise)
+    solo = []
+    for p, m in work:
+        _, o = _run(cfg, params, [(p, m)], mode="fused",
+                    batch_slots=SLOTS, steps_per_sync=16)
+        solo.append(o[0])
+    assert rec.pop("outputs") == solo, \
+        "batched greedy outputs != single-request sequential decode"
+    rec["solo_identity"] = True
+    out["throughput"] = rec
+    print(f"[throughput] host {rec['host']['tok_s']} tok/s, "
+          f"fused {rec['fused']['tok_s']} tok/s "
+          f"({rec['speedup']}x, identity ok)")
+
+
+# ---------------------------------------------------------------------------
+# prefill: sequential forcing vs chunked admission
+# ---------------------------------------------------------------------------
+def _run_ttft(cfg, params, work, **engine_kw):
+    """Like _run but records time-to-first-token per request."""
+    eng = DecodeEngine(cfg, params, max_seq=MAX_SEQ, **engine_kw)
+    reqs = [Request(prompt=p, max_new_tokens=m) for p, m in work]
+    for r in reqs:
+        eng.submit(r)
+    ttft = [None] * len(reqs)
+    t0 = time.perf_counter()
+    while (eng.queue or any(s is not None for s in eng.slot_req)) \
+            and eng.steps < 100_000:
+        eng.step()
+        now = time.perf_counter() - t0
+        for i, r in enumerate(reqs):
+            if ttft[i] is None and r.output:
+                ttft[i] = now
+    wall = time.perf_counter() - t0
+    toks = sum(len(r.output) for r in reqs)
+    outputs = [[int(np.asarray(t)) for t in r.output] for r in reqs]
+    return {"tokens": toks, "steps": eng.steps, "wall_s": round(wall, 4),
+            "tok_s": round(toks / wall, 2),
+            "ttft_mean_s": round(float(np.mean(ttft)), 4)}, outputs
+
+
+def bench_prefill(out, cfg, params, *, smoke: bool):
+    n = 6 if smoke else 12
+    work = _workload(cfg, n, seed=11, plen=(36, 56), max_new=4)
+    chunk_kw = dict(prefill_chunk=16, max_prefill_tokens_per_sync=32)
+    _warmup(cfg, params, plen=(36, 56), mode="fused", batch_slots=SLOTS)
+    _warmup(cfg, params, plen=(36, 56), mode="fused", batch_slots=SLOTS,
+            **chunk_kw)
+    seq, out_s = _run_ttft(cfg, params, work, mode="fused",
+                           batch_slots=SLOTS)
+    chunked, out_c = _run_ttft(cfg, params, work, mode="fused",
+                               batch_slots=SLOTS, **chunk_kw)
+    assert out_s == out_c, "chunked prefill changed greedy outputs"
+    assert chunked["steps"] < seq["steps"], \
+        "chunked prefill should need fewer decode steps"
+    out["prefill"] = {"sequential_force": seq, "chunked": chunked,
+                      "chunk": 16, "identity": True}
+    print(f"[prefill] sequential {seq['steps']} steps / {seq['wall_s']}s, "
+          f"chunked {chunked['steps']} steps / {chunked['wall_s']}s")
+
+
+# ---------------------------------------------------------------------------
+# poisson trace replay
+# ---------------------------------------------------------------------------
+def _replay(cfg, params, trace, **engine_kw):
+    eng = DecodeEngine(cfg, params, max_seq=MAX_SEQ, **engine_kw)
+    reqs = [Request(prompt=t.prompt, max_new_tokens=t.max_new_tokens,
+                    temperature=t.temperature) for t in trace]
+    stamps: list[list[float]] = [[] for _ in reqs]   # arrival + per-token
+    nxt = 0
+    t0 = time.perf_counter()
+    while True:
+        now = time.perf_counter() - t0
+        while nxt < len(reqs) and trace[nxt].arrival_s <= now:
+            eng.submit(reqs[nxt])
+            stamps[nxt].append(now)
+            nxt += 1
+        busy = eng.queue or any(s is not None for s in eng.slot_req)
+        if not busy:
+            if nxt >= len(reqs):
+                break
+            time.sleep(min(trace[nxt].arrival_s - now, 0.005))
+            continue
+        eng.step()
+        now = time.perf_counter() - t0
+        for i, r in enumerate(reqs):
+            while len(stamps[i]) - 1 < len(r.output):
+                stamps[i].append(now)
+    wall = time.perf_counter() - t0
+    gaps = np.concatenate([np.diff(s) for s in stamps if len(s) > 1])
+    toks = sum(len(r.output) for r in reqs)
+    return {"tokens": toks, "wall_s": round(wall, 3),
+            "tok_s": round(toks / wall, 2),
+            "gap_p50_ms": round(float(np.percentile(gaps, 50)) * 1e3, 3),
+            "gap_p99_ms": round(float(np.percentile(gaps, 99)) * 1e3, 3)}
+
+
+def bench_poisson(out, cfg, params, *, smoke: bool):
+    n = 16 if smoke else 48
+    trace = poisson_trace(n_requests=n, rate_per_s=40.0,
+                          vocab_size=cfg.vocab_size, seed=3,
+                          prompt_lens=(4, 16), output_lens=(4, 12))
+    _warmup(cfg, params, mode="host", batch_slots=SLOTS)
+    _warmup(cfg, params, mode="fused", batch_slots=SLOTS, steps_per_sync=8)
+    out["poisson_trace"] = {
+        "requests": n, "rate_per_s": 40.0,
+        "host": _replay(cfg, params, trace, mode="host", batch_slots=SLOTS),
+        "fused": _replay(cfg, params, trace, mode="fused",
+                         batch_slots=SLOTS, steps_per_sync=8),
+        "note": "fused p99 gap includes steps_per_sync burst quantisation",
+    }
+    h, f = out["poisson_trace"]["host"], out["poisson_trace"]["fused"]
+    print(f"[poisson] host {h['tok_s']} tok/s p99 {h['gap_p99_ms']}ms; "
+          f"fused {f['tok_s']} tok/s p99 {f['gap_p99_ms']}ms")
+
+
+# ---------------------------------------------------------------------------
+# decode-attention kernel
+# ---------------------------------------------------------------------------
+def bench_decode_kernel(out, *, smoke: bool):
+    from repro.kernels.decode_attention import decode_attention
+    from repro.kernels.ref import decode_attention_ref
+
+    B, S, H, K, D = 4, 100, 8, 2, 32          # non-dividing Sk, GQA 4:1
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, D), jax.numpy.float32)
+    k = jax.random.normal(ks[1], (B, S, K, D), jax.numpy.float32)
+    v = jax.random.normal(ks[2], (B, S, K, D), jax.numpy.float32)
+    kv_len = jax.numpy.asarray([7, 31, 64, 100], jax.numpy.int32)
+    got = decode_attention(q, k, v, kv_len, block_k=32, interpret=True)
+    ref = decode_attention_ref(q, k, v, kv_len)
+    diff = float(jax.numpy.max(jax.numpy.abs(got - ref)))
+    assert diff < 2e-5, f"decode kernel vs ref diff {diff}"
+
+    ref_jit = jax.jit(decode_attention_ref)
+    ref_jit(q, k, v, kv_len).block_until_ready()
+    reps = 20 if smoke else 100
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        ref_jit(q, k, v, kv_len).block_until_ready()
+    ref_ms = (time.perf_counter() - t0) / reps * 1e3
+    out["decode_kernel"] = {
+        "shape": {"B": B, "Sk": S, "H": H, "kv_heads": K, "head_dim": D},
+        "kv_len": [int(x) for x in kv_len],
+        "max_abs_diff_vs_ref": diff,
+        "xla_ref_ms": round(ref_ms, 3),
+        "note": "Pallas kernel validated in interpret mode on this "
+                "container; compiled path targets TPU",
+    }
+    print(f"[decode_kernel] interpret vs ref diff {diff:.2e}, "
+          f"xla ref {ref_ms:.2f}ms")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced sizes + hard floors, for CI")
+    ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_serve.json"))
+    args = ap.parse_args(argv)
+
+    cfg, params = _cfg_params()
+    out: dict = {"arch": ARCH, "layers": 2, "slots": SLOTS,
+                 "max_seq": MAX_SEQ, "smoke": bool(args.smoke),
+                 "backend": jax.default_backend()}
+    bench_decode_kernel(out, smoke=args.smoke)
+    bench_throughput(out, cfg, params, smoke=args.smoke)
+    bench_prefill(out, cfg, params, smoke=args.smoke)
+    bench_poisson(out, cfg, params, smoke=args.smoke)
+
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"[serve_bench] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Decode attention (Sq=1, GQA, ragged KV) as a Pallas TPU kernel.
+
+The prefill-shaped ``kernels/flash_attention.py`` wastes its whole
+(Sq/block_q) grid axis on decode, where every slot contributes exactly one
+query token.  This kernel is shaped for the serving fast path instead:
+
+  * grid = (batch, kv_heads, Sk/block_k) — no query axis at all.  The KV
+    dimension is the innermost 'arbitrary' axis so the online-softmax
+    accumulators live in VMEM scratch across KV steps.
+  * GQA is handled *inside* the kernel: the query block is the [G, D]
+    group of heads sharing one KV head, so the [B, 1, H, D] query never
+    replicates K/V and the per-step matmuls are [G, D] x [D, block_k].
+  * ragged batches: ``kv_len`` is a per-slot [B] vector read from SMEM.
+    Whole KV blocks past a slot's live length are skipped with ``pl.when``
+    (zero compute for the dead cache tail — continuous batching leaves
+    every slot at a different fill level), partial blocks are masked.
+
+Non-dividing Sk is handled by zero-padding K/V up to a block multiple in
+the wrapper; the pad region sits beyond every ``kv_len`` so the masking
+covers it.  The grid divisibility is asserted after padding (expolint
+pallas-rules).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, block_k: int):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kv_len = len_ref[0, 0]
+    k_start = ik * block_k
+
+    @pl.when(k_start < kv_len)
+    def _compute():
+        q = q_ref[0, 0, :, :].astype(jnp.float32)            # [G, D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # [bk, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale       # [G, bk]
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < kv_len, s, NEG_INF)
+
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)            # [bk, Dv]
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0, :, :] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, kv_len, *, scale: float | None = None,
+                     block_k: int = 128, interpret: bool = False):
+    """q: [B, H, D]; k: [B, Sk, K, D]; v: [B, Sk, K, Dv]; kv_len: [B] int32
+    (per-slot live cache length, position p attended iff p < kv_len).
+    Returns [B, H, Dv]."""
+    Bsz, H, D = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    assert H % K == 0, (H, K)
+    G = H // K
+    scale = D ** -0.5 if scale is None else scale
+    block_k = min(block_k, Sk)
+    pad = -Sk % block_k
+    if pad:
+        # padded tail sits at kpos >= Sk >= every kv_len -> fully masked
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Skp = Sk + pad
+    assert Skp % block_k == 0, (Skp, block_k)
+    grid = (Bsz, K, Skp // block_k)
+
+    qg = q.reshape(Bsz, K, G, D)
+    lens = jnp.asarray(kv_len, jnp.int32).reshape(Bsz, 1)
+    kernel = functools.partial(_kernel, scale=scale, block_k=block_k)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, ik: (b, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda b, h, ik: (b, ik, h, 0)),
+            pl.BlockSpec((1, block_k, 1, Dv), lambda b, h, ik: (b, ik, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dv), lambda b, h, ik: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, K, G, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, Dv), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(lens, qg, k, v)
+    return out.reshape(Bsz, H, Dv)

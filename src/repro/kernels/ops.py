@@ -52,6 +52,24 @@ def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
     )
 
 
+def decode_attention(q, k, v, kv_len, *, scale: float | None = None,
+                     block_k: int = 128):
+    """Sq=1 GQA decode attention over a ragged KV cache.
+
+    q: [B,H,D], k/v: [B,Sk,K,D/Dv], kv_len: [B] int32 -> [B,H,Dv].  Same
+    dispatch policy as ``flash_attention``: the pure-jnp reference is the
+    XLA fallback on non-TPU backends, the Pallas decode kernel
+    (``kernels/decode_attention.py``) runs on TPU or under
+    ``REPRO_PALLAS=interpret``."""
+    mode = _mode()
+    if mode in ("ref", "naive"):
+        return ref.decode_attention_ref(q, k, v, kv_len, scale=scale)
+    from repro.kernels import decode_attention as dk
+
+    return dk.decode_attention(q, k, v, kv_len, scale=scale, block_k=block_k,
+                               interpret=(mode == "interpret"))
+
+
 def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 64, h0=None,
              return_final_state: bool = False):
     """Mamba-2 SSD chunked scan. See kernels.ref.ssd_chunked_ref."""

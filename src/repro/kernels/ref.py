@@ -42,6 +42,32 @@ def attention_ref(
     return out.reshape(B, Sq, H, v.shape[-1]).astype(q.dtype)
 
 
+def decode_attention_ref(
+    q: jax.Array,       # [B, H, D]
+    k: jax.Array,       # [B, Sk, K, D]
+    v: jax.Array,       # [B, Sk, K, Dv]
+    kv_len: jax.Array,  # [B] int32 — position p attended iff p < kv_len
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """Single-token (Sq=1) GQA decode attention over a ragged KV cache.
+
+    fp32 softmax; matches ``kernels/decode_attention.py``.  Every slot must
+    have ``kv_len >= 1`` (an all-masked row would softmax to NaN).
+    Returns [B, H, Dv]."""
+    B, H, D = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = D ** -0.5 if scale is None else scale
+    qg = q.reshape(B, K, G, D).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32)) * scale
+    mask = jnp.arange(Sk)[None, :] < kv_len[:, None]          # [B, Sk]
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, H, v.shape[-1]).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # Mamba-2 SSD (state-space duality) — chunked reference
 # ---------------------------------------------------------------------------

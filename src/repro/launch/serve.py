@@ -1,7 +1,8 @@
 """Serving launcher: continuous-batching decode over synthetic requests.
 
     PYTHONPATH=src python -m repro.launch.serve --arch mamba2-130m \
-        --requests 8 --slots 4 --max-new 16
+        --requests 8 --slots 4 --max-new 16 \
+        --mode fused --steps-per-sync 8 --prefill-chunk 16
 """
 from __future__ import annotations
 
@@ -22,7 +23,17 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mode", choices=["fused", "host"], default="fused",
+                    help="fused: N decode steps per host sync; "
+                         "host: seed-style sync every step")
+    ap.add_argument("--steps-per-sync", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="batched prefill chunk size (0 = sequential "
+                         "one-token-per-step prompt forcing)")
+    ap.add_argument("--max-prefill-tokens-per-sync", type=int, default=None,
+                    help="admission budget on prefill work per sync")
     args = ap.parse_args(argv)
 
     from repro.configs import get_config, reduced_config
@@ -33,8 +44,12 @@ def main(argv=None):
     cfg = (reduced_config(args.arch) if args.preset == "reduced"
            else get_config(args.arch))
     params = init_params(lm.make_lm(cfg), jax.random.PRNGKey(args.seed))
-    eng = DecodeEngine(cfg, params, batch_slots=args.slots,
-                       max_seq=args.max_seq, rng_seed=args.seed)
+    eng = DecodeEngine(
+        cfg, params, batch_slots=args.slots, max_seq=args.max_seq,
+        rng_seed=args.seed, mode=args.mode,
+        steps_per_sync=args.steps_per_sync,
+        prefill_chunk=args.prefill_chunk,
+        max_prefill_tokens_per_sync=args.max_prefill_tokens_per_sync)
     rng = np.random.default_rng(args.seed)
     reqs = []
     for _ in range(args.requests):
@@ -42,7 +57,8 @@ def main(argv=None):
         shape = (plen, cfg.num_codebooks) if cfg.num_codebooks else plen
         prompt = rng.integers(0, cfg.vocab_size, shape).astype(np.int32)
         reqs.append(Request(prompt=prompt, max_new_tokens=args.max_new,
-                            temperature=args.temperature))
+                            temperature=args.temperature,
+                            top_k=args.top_k))
         eng.submit(reqs[-1])
     t0 = time.time()
     steps = eng.run_until_drained()
@@ -50,7 +66,7 @@ def main(argv=None):
     total = sum(len(r.output) for r in reqs)
     print(f"[launch.serve] {args.arch}: {args.requests} requests, "
           f"{total} tokens in {steps} steps / {dt:.1f}s "
-          f"({total/dt:.1f} tok/s, {args.slots} slots)")
+          f"({total/dt:.1f} tok/s, {args.slots} slots, {args.mode} mode)")
 
 
 if __name__ == "__main__":

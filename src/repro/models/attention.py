@@ -70,6 +70,40 @@ def make_kv_cache(cfg, batch: int, max_seq: int, stack: tuple = ()):
     }
 
 
+def apply_attention_prefill_chunk(cfg, p, x, cache, start, active=None):
+    """Batched prefill of a C-token chunk into the KV cache.
+
+    x: [B, C, d]; cache: {k,v: [B, Smax, K, hd]}; start: [B] int32 (cache
+    position of the chunk's first token — per-slot, so freshly admitted
+    requests prefill while resident slots sit at different fill levels);
+    active: optional [B] bool — inactive slots leave the cache untouched
+    and their outputs are garbage (callers must ignore them).
+
+    This is ``flash_attention(q_offset=...)`` generalised to a *traced
+    per-slot* offset vector: chunk queries attend to the full cache with a
+    kpos <= start+q mask.  Returns (out [B, C, d], new_cache)."""
+    B, C, _ = x.shape
+    positions = start[:, None] + jnp.arange(C)[None, :]         # [B, C]
+    q, k_new, v_new = _qkv(cfg, p, x, positions)
+    smax = cache["k"].shape[1]
+    wpos = positions if active is None else jnp.where(
+        active[:, None], positions, smax)
+    b_idx = jnp.arange(B)[:, None]
+    k = cache["k"].at[b_idx, wpos, ...].set(k_new, mode="drop")
+    v = cache["v"].at[b_idx, wpos, ...].set(v_new, mode="drop")
+    K = k.shape[2]
+    G = cfg.num_heads // K
+    qg = q.reshape(B, C, K, G, cfg.head_dim).astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    scores = scores * (cfg.head_dim ** -0.5)
+    mask = jnp.arange(smax)[None, None, :] <= positions[:, :, None]
+    scores = jnp.where(mask[:, None, None, :, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    out = out.reshape(B, C, cfg.q_dim).astype(x.dtype)
+    return out @ p["wo"], {"k": k, "v": v}
+
+
 def apply_attention_decode(cfg, p, x, cache, pos, active=None):
     """One-token decode. x: [B, 1, d]; cache: {k,v: [B, Smax, K, hd]};
     pos: [B] int32 (index of the new token); active: optional [B] bool —
@@ -82,14 +116,11 @@ def apply_attention_decode(cfg, p, x, cache, pos, active=None):
     wpos = pos if active is None else jnp.where(active, pos, smax)
     k = cache["k"].at[b_idx, wpos, ...].set(k_new[:, 0], mode="drop")
     v = cache["v"].at[b_idx, wpos, ...].set(v_new[:, 0], mode="drop")
-    Smax, K = k.shape[1], k.shape[2]
-    G = cfg.num_heads // K
-    qg = q.reshape(B, 1, K, G, cfg.head_dim).astype(jnp.float32)
-    scores = jnp.einsum("bkgd,bskd->bkgs", qg[:, 0], k.astype(jnp.float32))
-    scores = scores * (cfg.head_dim ** -0.5)
-    mask = jnp.arange(Smax)[None, :] <= pos[:, None]  # [B, Smax]
-    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
-    probs = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(jnp.float32))
-    out = out.reshape(B, 1, cfg.q_dim).astype(x.dtype)
+    # position p attended iff p <= pos, i.e. p < pos + 1 == kv_len.  The
+    # dispatcher's ref path is bit-identical to the previous inline einsum
+    # formulation; on TPU / REPRO_PALLAS=interpret the Sq=1 Pallas decode
+    # kernel skips the dead cache tail per slot.
+    out = ops.decode_attention(q[:, 0], k, v, pos + 1,
+                               scale=cfg.head_dim ** -0.5)
+    out = out.reshape(B, 1, cfg.q_dim)
     return out @ p["wo"], {"k": k, "v": v}

@@ -127,6 +127,33 @@ def apply_block_decode(cfg, p, h, cache, pos, mixer: str, ffn: str,
     return h, new_cache
 
 
+def apply_block_prefill_chunk(cfg, p, h, cache, start, mixer: str, ffn: str,
+                              active=None):
+    """Chunked prefill through one block. h: [B, C, d]; start: [B] int32
+    per-slot cache offset of the chunk. Returns (h, new_cache)."""
+    x = rmsnorm(h, p["ln1"], cfg.norm_eps)
+    if mixer == "attn":
+        r, new_cache = attn_mod.apply_attention_prefill_chunk(
+            cfg, p["mixer"], x, cache, start, active)
+    elif mixer == "mla":
+        r, new_cache = mla_mod.apply_mla_prefill_chunk(
+            cfg, p["mixer"], x, cache, start, active)
+    else:
+        r, new_cache = mamba_mod.apply_mamba_prefill_chunk(
+            cfg, p["mixer"], x, cache, start, active)
+    h = h + r
+    if ffn != "none":
+        x = rmsnorm(h, p["ln2"], cfg.norm_eps)
+        if ffn == "moe":
+            B, S, d = x.shape
+            y, _ = apply_moe(cfg, p["ffn"], x.reshape(B * S, d))
+            y = y.reshape(B, S, d)
+        else:
+            y = apply_dense_ffn(cfg, p["ffn"], x)
+        h = h + y
+    return h, new_cache
+
+
 # ---------------------------------------------------------------------------
 # stacking (scan over homogeneous layers)
 # ---------------------------------------------------------------------------
@@ -212,6 +239,21 @@ def make_super_block_cache(cfg, plan: HybridPlan, batch: int, max_seq: int,
         c[group] = make_block_cache(cfg, mixer, batch, max_seq,
                                     stack=(*stack, n))
     return c
+
+
+def apply_super_block_prefill_chunk(cfg, p, h, cache, start,
+                                    plan: HybridPlan, active=None):
+    new_cache = {g: [None] * n for g, n in plan.group_sizes.items()}
+    for group, idx, mixer, ffn in plan.entries:
+        h, nc = apply_block_prefill_chunk(
+            cfg, take_layer(p[group], idx), h, take_layer(cache[group], idx),
+            start, mixer, ffn, active)
+        new_cache[group][idx] = nc
+    stacked = {}
+    for g, lst in new_cache.items():
+        stacked[g] = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs, axis=0), *lst)
+    return h, stacked
 
 
 def apply_super_block_decode(cfg, p, h, cache, pos, plan: HybridPlan,

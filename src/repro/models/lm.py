@@ -291,6 +291,37 @@ def make_cache(cfg, batch_size: int, max_seq: int):
     return out
 
 
+def prefill_chunk(cfg, params, batch, cache, *, unroll: bool = False):
+    """Prefill a C-token chunk into slot caches (continuous batching).
+
+    batch: tokens [B, C(,cb)], start [B] int32 (per-slot cache offset of
+    the chunk's first token), optional active [B] bool (inactive slots'
+    caches pass through untouched).  No head/logits — admission runs this
+    to warm the cache; the first sampled token always comes from the
+    decode path.  Returns new_cache only."""
+    tokens, start = batch["tokens"], batch["start"]
+    active = batch.get("active")
+    h = embed_tokens(cfg, params, tokens, batch)
+    new_caches = []
+    for seg, seg_params, seg_cache in zip(segments(cfg), params["segments"],
+                                          cache, strict=False):
+        def body(carry, xs, seg=seg):
+            hh = carry
+            layer_p, layer_c = xs
+            hh, nc = (B.apply_super_block_prefill_chunk(
+                          cfg, layer_p, hh, layer_c, start, seg.plan, active)
+                      if seg.kind == "hybrid"
+                      else B.apply_block_prefill_chunk(
+                          cfg, layer_p, hh, layer_c, start, seg.mixer,
+                          seg.ffn, active))
+            return hh, nc
+
+        h, new_c = jax.lax.scan(body, h, (seg_params, seg_cache),
+                                unroll=seg.count if unroll else 1)
+        new_caches.append(new_c)
+    return new_caches
+
+
 def decode_step(cfg, params, batch, cache, *, unroll: bool = False):
     """One decode step. batch: tokens [B,1(,cb)], pos [B] int32.
     Returns (logits [B, V(,cb)], new_cache)."""

@@ -101,6 +101,46 @@ def make_mamba_cache(cfg, batch: int, stack: tuple = ()):
     }
 
 
+def apply_mamba_prefill_chunk(cfg, p, x, cache, start=None, active=None):
+    """Prefill a C-token chunk, carrying conv + SSM state across chunks.
+
+    x: [B, C, d]; cache {conv: [B, d_conv-1, ch], ssm: [B, H, P, N]};
+    start is unused (SSM state is position-free) but kept for signature
+    parity with the attention variants; active: optional [B] bool —
+    inactive slots keep their state unchanged, outputs garbage.
+
+    The conv left-context comes from the cached last (d_conv-1) raw xbc
+    inputs, so chunked prefill matches full-sequence ``apply_mamba`` up to
+    the chunked-vs-sequential SSD fp tolerance.  Returns (out, new_cache)."""
+    s, d_in, nheads, conv_ch = _dims(cfg)
+    B, C, _ = x.shape
+    proj = x @ p["in_proj"]
+    z, xbc_raw, dt_raw = _split_proj(cfg, proj)
+    K = s.d_conv
+    window = jnp.concatenate(
+        [cache["conv"].astype(xbc_raw.dtype), xbc_raw], axis=1)  # [B,K-1+C,ch]
+    new_conv = window[:, -(K - 1):].astype(cache["conv"].dtype)
+    # conv over the window: positions >= K-1 see only real left context
+    xbc = _causal_conv(p, window)[:, K - 1:]                     # [B, C, ch]
+    xs = xbc[..., :d_in].reshape(B, C, nheads, s.head_dim)
+    Bm = xbc[..., d_in: d_in + s.n_groups * s.d_state].reshape(
+        B, C, s.n_groups, s.d_state)
+    Cm = xbc[..., d_in + s.n_groups * s.d_state:].reshape(
+        B, C, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, h_final = ops.ssd_scan(xs, dt, A, Bm, Cm, chunk=min(s.chunk, C),
+                              h0=cache["ssm"], return_final_state=True)
+    if active is not None:
+        h_final = jnp.where(active.reshape(B, 1, 1, 1), h_final, cache["ssm"])
+        new_conv = jnp.where(active.reshape(B, 1, 1), new_conv, cache["conv"])
+    y = y + xs * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B, C, d_in)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = (y @ p["out_proj"]).astype(x.dtype)
+    return out, {"conv": new_conv, "ssm": h_final}
+
+
 def apply_mamba_decode(cfg, p, x, cache, pos=None, active=None):
     """One-token decode. x: [B, 1, d]; cache {conv, ssm}; active: optional
     [B] bool — inactive slots keep their conv/SSM state unchanged."""

@@ -90,6 +90,41 @@ def make_mla_cache(cfg, batch: int, max_seq: int, stack: tuple = ()):
     }
 
 
+def apply_mla_prefill_chunk(cfg, p, x, cache, start, active=None):
+    """Weight-absorbed prefill of a C-token chunk into the latent cache.
+
+    x: [B, C, d]; cache {ckv: [B,S,r], kpe: [B,S,rope]}; start: [B] int32
+    (per-slot cache position of the chunk's first token); active: optional
+    [B] bool — inactive slots leave the cache untouched, outputs garbage.
+    Returns (out [B, C, d], new_cache)."""
+    B, C, _ = x.shape
+    m, H = cfg.mla, cfg.num_heads
+    positions = start[:, None] + jnp.arange(C)[None, :]          # [B, C]
+    q_nope, q_pe = _queries(cfg, p, x, positions)                # [B,C,H,*]
+    ckv_new, kpe_new = _latent_kv(cfg, p, x, positions)
+    smax = cache["ckv"].shape[1]
+    wpos = positions if active is None else jnp.where(
+        active[:, None], positions, smax)
+    b_idx = jnp.arange(B)[:, None]
+    ckv = cache["ckv"].at[b_idx, wpos, ...].set(ckv_new, mode="drop")
+    kpe = cache["kpe"].at[b_idx, wpos, ...].set(kpe_new, mode="drop")
+    wuk = p["wuk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                       wuk.astype(jnp.float32))
+    scores = jnp.einsum("bqhr,bsr->bhqs", q_lat, ckv.astype(jnp.float32))
+    scores += jnp.einsum("bqhd,bsd->bhqs", q_pe.astype(jnp.float32),
+                         kpe.astype(jnp.float32))
+    scores *= (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    mask = jnp.arange(smax)[None, None, :] <= positions[:, :, None]
+    scores = jnp.where(mask[:, None, :, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", probs, ckv.astype(jnp.float32))
+    wuv = p["wuv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bqhr,rhd->bqhd", o_lat, wuv.astype(jnp.float32))
+    out = out.reshape(B, C, H * m.v_head_dim).astype(x.dtype)
+    return out @ p["wo"], {"ckv": ckv, "kpe": kpe}
+
+
 def apply_mla_decode(cfg, p, x, cache, pos, active=None):
     """Weight-absorbed one-token decode.
 

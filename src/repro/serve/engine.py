@@ -7,21 +7,41 @@ cache and keep their SSM/conv state frozen, so admission/retirement of one
 request never perturbs the others — this is what makes continuous batching
 correct for hybrid/SSM architectures, not just KV-cache transformers.
 
-Prompt consumption here is sequential forced decode (one token per step,
-per slot admission); the launcher's ``prefill`` path is the batched
-alternative for long prompts.
+Two stepping modes:
+
+* ``mode="fused"`` (default): sampling runs *inside* the jitted step —
+  per-slot PRNG keys split on device, temperature/top-k as traced [B]
+  vectors, prompt forcing / emission / retirement bookkeeping as device
+  arrays — and a ``lax.scan`` runs ``steps_per_sync`` decode steps per
+  host round-trip.  The host only syncs to unpack emitted tokens and
+  admit/retire requests.
+* ``mode="host"``: the per-step-host-sync baseline (one decode dispatch,
+  full-logits device->host transfer, per-slot python sampling per step) —
+  the seed engine's cost profile with its correctness bugs fixed
+  (per-slot RNG keys instead of one shared subkey, deque admission,
+  single-trace sampling via a traced temperature).  Kept as the
+  benchmark baseline; greedy outputs are identical across modes.
+
+Prompt consumption is sequential forced decode by default; with
+``prefill_chunk=C > 0`` admission runs batched C-token prefill chunks
+into the slot's cache (``lm.prefill_chunk``) and only the remainder of
+the prompt goes through forced decode, with
+``max_prefill_tokens_per_sync`` bounding per-sync prefill work so decode
+latency of resident slots stays flat.
 """
 from __future__ import annotations
 
+import collections
 from dataclasses import dataclass, field
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import lm
-from repro.models.params import init_params
-from repro.serve.sampler import sample
+from repro.models.params import init_params, is_param
+from repro.serve.sampler import sample, sample_batch
 
 
 @dataclass
@@ -29,90 +49,292 @@ class Request:
     prompt: np.ndarray          # [S] (or [S, cb]) int32
     max_new_tokens: int = 16
     temperature: float = 0.0
+    top_k: int = 0
     output: list = field(default_factory=list)
     done: bool = False
 
 
+# ---------------------------------------------------------------------------
+# module-level jits (static cfg is hashable -> engines share compilations)
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
+def _decode_once(cfg, params, cache, tokens, pos, active):
+    batch = {"tokens": tokens, "pos": pos, "active": active}
+    return lm.decode_step(cfg, params, batch, cache)
+
+
+@partial(jax.jit, static_argnums=(0,), donate_argnums=(2,))
+def _prefill_chunk(cfg, params, cache, tokens, start, active):
+    batch = {"tokens": tokens, "start": start, "active": active}
+    return lm.prefill_chunk(cfg, params, batch, cache)
+
+
+@partial(jax.jit, static_argnums=(0, 1), donate_argnums=(3, 4))
+def _fused_steps(cfg, n_steps, params, cache, state, prompt_buf, temp, topk):
+    """Run ``n_steps`` decode steps fully on device.
+
+    state: {tokens [B,1(,cb)], pos/cursor/plen/remaining [B] i32,
+    live [B] bool, keys [B,2] u32}.  Returns (cache, state,
+    sampled [n,B(,cb)], emit [n,B]) — the host unpacks emissions in step
+    order after the single sync."""
+    max_seq = prompt_buf.shape[1]
+    b_idx = jnp.arange(prompt_buf.shape[0])
+
+    def body(carry, _):
+        cache, st = carry
+        tokens, live, pos = st["tokens"], st["live"], st["pos"]
+        cursor, plen, remaining = st["cursor"], st["plen"], st["remaining"]
+        batch = {"tokens": tokens, "pos": pos, "active": live}
+        logits, cache = lm.decode_step(cfg, params, batch, cache)
+        pos = pos + live
+        ks = jax.vmap(lambda k: jax.random.split(k, 2))(st["keys"])
+        keys, subs = ks[:, 0], ks[:, 1]
+        # every slot advances its stream every step (dead-slot draws are
+        # discarded) so a request's stream doesn't depend on neighbours
+        sampled = sample_batch(logits, subs, temp, topk)     # [B(,cb)]
+        forcing = cursor < plen
+        forced = prompt_buf[b_idx, jnp.clip(cursor, 0, max_seq - 1)]
+        sel = forcing if sampled.ndim == 1 else forcing[:, None]
+        lv = live if sampled.ndim == 1 else live[:, None]
+        nxt = jnp.where(lv, jnp.where(sel, forced, sampled), tokens[:, 0])
+        cursor = cursor + (forcing & live)
+        emit = live & ~forcing
+        remaining = remaining - emit
+        done_now = emit & ((remaining <= 0) | (pos >= max_seq - 1))
+        st = {"tokens": nxt[:, None], "pos": pos, "cursor": cursor,
+              "plen": plen, "remaining": remaining,
+              "live": live & ~done_now, "keys": keys}
+        return (cache, st), (sampled, emit)
+
+    (cache, state), (sampled, emit) = jax.lax.scan(
+        body, (cache, state), None, length=n_steps)
+    return cache, state, sampled, emit
+
+
 class DecodeEngine:
     def __init__(self, cfg, params, *, batch_slots: int = 4,
-                 max_seq: int = 512, rng_seed: int = 0):
+                 max_seq: int = 512, rng_seed: int = 0, mode: str = "fused",
+                 steps_per_sync: int = 8, prefill_chunk: int = 0,
+                 max_prefill_tokens_per_sync: int | None = None):
+        assert mode in ("fused", "host"), mode
         self.cfg = cfg
         self.params = params
         self.B = batch_slots
         self.max_seq = max_seq
+        self.mode = mode
+        self.steps_per_sync = max(1, int(steps_per_sync))
+        self.prefill_chunk = int(prefill_chunk)
+        self.max_prefill_tokens_per_sync = max_prefill_tokens_per_sync
         self.cache = init_params(lm.make_cache(cfg, batch_slots, max_seq),
                                  jax.random.PRNGKey(0))
-        self.pos = np.zeros((batch_slots,), np.int32)
-        self.active: list[Request | None] = [None] * batch_slots
-        self.remaining = np.zeros((batch_slots,), np.int32)
-        # remaining prompt tokens to force-feed, per slot
-        self.pending_prompt: list[list] = [[] for _ in range(batch_slots)]
-        self.rng = jax.random.PRNGKey(rng_seed)
-        self.queue: list[Request] = []
+        B = batch_slots
+        cb_tail = (cfg.num_codebooks,) if cfg.num_codebooks else ()
+        self.tokens = np.zeros((B, 1, *cb_tail), np.int32)
+        self.pos = np.zeros((B,), np.int32)
+        self.cursor = np.zeros((B,), np.int32)
+        self.plen = np.zeros((B,), np.int32)
+        self.remaining = np.zeros((B,), np.int32)
+        self.live = np.zeros((B,), bool)
+        self.keys = np.zeros((B, 2), np.uint32)
+        self.temp = np.zeros((B,), np.float32)
+        self.topk = np.zeros((B,), np.int32)
+        self.prompt_buf = np.zeros((B, max_seq, *cb_tail), np.int32)
+        self.pf_target = np.zeros((B,), np.int32)   # tokens to chunk-prefill
+        self.pf_done = np.zeros((B,), np.int32)
+        self.slot_req: list[Request | None] = [None] * B
+        self.queue: collections.deque[Request] = collections.deque()
         self.steps = 0
+        self._root_key = jax.random.PRNGKey(rng_seed)
+        self._admitted = 0
 
-        def _step(params, cache, tokens, pos, active):
-            batch = {"tokens": tokens, "pos": pos, "active": active}
-            logits, new_cache = lm.decode_step(cfg, params, batch, cache)
-            return logits, new_cache
+        # slot-state leaves (SSM/conv — anything without a seq_kv axis)
+        # must be zeroed when a slot is reused: position masking protects
+        # KV rows, but recurrent state would leak the previous occupant.
+        descr = jax.tree_util.tree_leaves(
+            lm.make_cache(cfg, batch_slots, max_seq), is_leaf=is_param)
+        self._state_axes = tuple(
+            None if "seq_kv" in p.logical else p.logical.index("batch")
+            for p in descr)
 
-        self._decode = jax.jit(_step, donate_argnums=(1,))
-        self._next_tokens = np.zeros(self._tok_shape(), np.int32)
+        def _zero_slots(cache, mask):
+            leaves, treedef = jax.tree_util.tree_flatten(cache)
+            out = []
+            for leaf, ax in zip(leaves, self._state_axes, strict=True):
+                if ax is None:
+                    out.append(leaf)
+                else:
+                    shape = [1] * leaf.ndim
+                    shape[ax] = leaf.shape[ax]
+                    out.append(jnp.where(mask.reshape(shape),
+                                         jnp.zeros_like(leaf), leaf))
+            return jax.tree_util.tree_unflatten(treedef, out)
 
-    def _tok_shape(self):
-        if self.cfg.num_codebooks:
-            return (self.B, 1, self.cfg.num_codebooks)
-        return (self.B, 1)
+        self._zero_slots = jax.jit(_zero_slots, donate_argnums=(0,))
+        self._has_state = any(a is not None for a in self._state_axes)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
         self.queue.append(req)
 
-    def _admit(self):
-        for slot in range(self.B):
-            if self.active[slot] is None and self.queue:
-                req = self.queue.pop(0)
-                self.active[slot] = req
-                self.pos[slot] = 0
-                self.remaining[slot] = req.max_new_tokens
-                self.pending_prompt[slot] = list(req.prompt)
-                first = self.pending_prompt[slot].pop(0)
-                self._next_tokens[slot, 0] = first
+    def _start_decode(self, slot: int):
+        """Arm a slot for (forced-)decode after 0..pf_target prefilled."""
+        q = int(self.pf_target[slot])
+        self.tokens[slot, 0] = self.prompt_buf[slot, q]
+        self.cursor[slot] = q + 1
+        self.pos[slot] = q
+        self.live[slot] = True
 
-    def step(self) -> int:
-        """One decode step across all slots; returns #requests finished."""
-        self._admit()
-        live = np.array([r is not None for r in self.active])
-        if not live.any():
+    def _admit(self):
+        admitted = np.zeros((self.B,), bool)
+        for slot in range(self.B):
+            if self.slot_req[slot] is None and self.queue:
+                req = self.queue.popleft()
+                self.slot_req[slot] = req
+                prompt = np.asarray(req.prompt, np.int32)
+                L = prompt.shape[0]
+                assert 1 <= L < self.max_seq, (L, self.max_seq)
+                self.prompt_buf[slot, :L] = prompt
+                self.plen[slot] = L
+                self.remaining[slot] = req.max_new_tokens
+                # per-request PRNG stream, independent of slot placement
+                self.keys[slot] = np.asarray(
+                    jax.random.fold_in(self._root_key, self._admitted))
+                self._admitted += 1
+                self.temp[slot] = req.temperature
+                self.topk[slot] = req.top_k
+                C = self.prefill_chunk
+                # full chunks only (single prefill trace; conv state stays
+                # exact) — the remainder plus the last prompt token go
+                # through forced decode, so the first sampled token's
+                # logits always come from the decode path
+                q = ((L - 1) // C) * C if C > 0 else 0
+                self.pf_target[slot] = q
+                self.pf_done[slot] = 0
+                if q:
+                    self.live[slot] = False   # decode starts after prefill
+                else:
+                    self._start_decode(slot)
+                admitted[slot] = True
+        if admitted.any() and self._has_state:
+            self.cache = self._zero_slots(self.cache, jnp.asarray(admitted))
+
+    def _pump_prefill(self):
+        C = self.prefill_chunk
+        if not C:
+            return
+        pending = [s for s in range(self.B)
+                   if self.slot_req[s] is not None
+                   and self.pf_done[s] < self.pf_target[s]]
+        if not pending:
+            return
+        budget = self.max_prefill_tokens_per_sync
+        take = []
+        for s in pending:
+            if budget is not None and take and (len(take) + 1) * C > budget:
+                break   # bound per-sync prefill work (at least one slot)
+            take.append(s)
+        tok = np.zeros((self.B, C, *self.tokens.shape[2:]), np.int32)
+        start = np.zeros((self.B,), np.int32)
+        active = np.zeros((self.B,), bool)
+        for s in take:
+            d = int(self.pf_done[s])
+            tok[s] = self.prompt_buf[s, d:d + C]
+            start[s] = d
+            active[s] = True
+        self.cache = _prefill_chunk(
+            self.cfg, self.params, self.cache, jnp.asarray(tok),
+            jnp.asarray(start), jnp.asarray(active))
+        for s in take:
+            self.pf_done[s] += C
+            if self.pf_done[s] >= self.pf_target[s]:
+                self._start_decode(s)
+
+    # ------------------------------------------------------------------
+    def _host_step(self) -> int:
+        """Seed-style per-step host sync (benchmark baseline)."""
+        if not self.live.any():
             return 0
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self._next_tokens),
-            jnp.asarray(self.pos), jnp.asarray(live))
+        logits, self.cache = _decode_once(
+            self.cfg, self.params, self.cache, jnp.asarray(self.tokens),
+            jnp.asarray(self.pos), jnp.asarray(self.live))
         self.steps += 1
-        self.rng, sub = jax.random.split(self.rng)
         logits_np = np.asarray(logits.astype(jnp.float32))
         finished = 0
-        for slot, req in enumerate(self.active):
-            if req is None:
+        for slot in range(self.B):
+            req = self.slot_req[slot]
+            if req is None or not self.live[slot]:
                 continue
             self.pos[slot] += 1
-            if self.pending_prompt[slot]:
-                # still forcing the prompt; next input is the next prompt tok
-                self._next_tokens[slot, 0] = self.pending_prompt[slot].pop(0)
+            if self.cursor[slot] < self.plen[slot]:
+                self.tokens[slot, 0] = self.prompt_buf[slot,
+                                                       self.cursor[slot]]
+                self.cursor[slot] += 1
                 continue
-            tok = np.asarray(sample(jnp.asarray(logits_np[slot]), sub,
-                                    temperature=req.temperature))
-            req.output.append(tok.copy())
+            key, sub = jax.random.split(jnp.asarray(self.keys[slot]))
+            self.keys[slot] = np.asarray(key)
+            # eager per-slot sampling on purpose: this mode is the seed
+            # engine's cost profile (the benchmark baseline), minus its
+            # correctness bugs — sample() itself now takes temperature as
+            # a traced operand so jitted callers never retrace on it
+            tok = np.asarray(sample(
+                jnp.asarray(logits_np[slot]), sub,
+                temperature=jnp.float32(req.temperature), top_k=req.top_k))
+            req.output.append(np.array(tok))
             self.remaining[slot] -= 1
-            self._next_tokens[slot, 0] = tok
+            self.tokens[slot, 0] = tok
             if self.remaining[slot] <= 0 or self.pos[slot] >= self.max_seq - 1:
                 req.done = True
-                self.active[slot] = None
+                self.slot_req[slot] = None
+                self.live[slot] = False
                 finished += 1
         return finished
 
+    def _fused_sync(self) -> int:
+        """One fused dispatch of ``steps_per_sync`` steps + one host sync."""
+        if not self.live.any():
+            return 0
+        state = {"tokens": jnp.asarray(self.tokens),
+                 "pos": jnp.asarray(self.pos),
+                 "cursor": jnp.asarray(self.cursor),
+                 "plen": jnp.asarray(self.plen),
+                 "remaining": jnp.asarray(self.remaining),
+                 "live": jnp.asarray(self.live),
+                 "keys": jnp.asarray(self.keys)}
+        self.cache, state, sampled, emit = _fused_steps(
+            self.cfg, self.steps_per_sync, self.params, self.cache, state,
+            jnp.asarray(self.prompt_buf), jnp.asarray(self.temp),
+            jnp.asarray(self.topk))
+        self.steps += self.steps_per_sync
+        sampled = np.asarray(sampled)
+        emit = np.asarray(emit)
+        for s in range(self.steps_per_sync):
+            for slot in np.nonzero(emit[s])[0]:
+                self.slot_req[slot].output.append(np.array(sampled[s, slot]))
+        self.tokens = np.array(state["tokens"])
+        self.pos = np.array(state["pos"])
+        self.cursor = np.array(state["cursor"])
+        self.remaining = np.array(state["remaining"])
+        self.keys = np.array(state["keys"])
+        new_live = np.array(state["live"])
+        finished = 0
+        for slot in np.nonzero(self.live & ~new_live)[0]:
+            self.slot_req[slot].done = True
+            self.slot_req[slot] = None
+            finished += 1
+        self.live = new_live
+        return finished
+
+    def step(self) -> int:
+        """Admission + one stepping round; returns #requests finished.
+
+        In fused mode one round is ``steps_per_sync`` decode steps."""
+        self._admit()
+        self._pump_prefill()
+        return self._fused_sync() if self.mode == "fused" \
+            else self._host_step()
+
     def run_until_drained(self, max_steps: int = 100_000) -> int:
-        while (self.queue or any(r is not None for r in self.active)) \
+        while (self.queue or any(r is not None for r in self.slot_req)) \
                 and self.steps < max_steps:
             self.step()
         return self.steps
