@@ -15,11 +15,13 @@ Two invariants, both born from real breakage:
      silently drops the remainder: ``grid=(S // block,)`` with
      ``S % block != 0`` skips the tail elements and produces wrong
      results with no error.  Inside any function that invokes
-     ``pl.pallas_call``, every floor division must be paired with a
-     matching ``lhs % rhs`` check (assert or comparison) over the same
-     operands in the same function.  Floor divisions inside ``lambda``
-     index maps are exempt — Pallas index maps legitimately map block
-     indices with ``//``.
+     ``pl.pallas_call`` — or constructs a ``*GridSpec`` (e.g.
+     ``pltpu.PrefetchScalarGridSpec``), which carries a grid to a
+     ``pallas_call`` elsewhere — every floor division must be paired
+     with a matching ``lhs % rhs`` check (assert or comparison) over the
+     same operands in the same function.  Floor divisions inside
+     ``lambda`` index maps are exempt — Pallas index maps legitimately
+     map block indices with ``//``.
 """
 from __future__ import annotations
 
@@ -52,10 +54,18 @@ def _nodes_in_lambdas(func: ast.FunctionDef) -> set[int]:
 
 
 def _uses_pallas_call(func: ast.FunctionDef) -> bool:
+    """True if ``func`` feeds a Pallas grid: calls ``pallas_call`` itself
+    or constructs a ``*GridSpec`` (e.g. ``pltpu.PrefetchScalarGridSpec``)
+    that a ``pallas_call`` elsewhere consumes — a grid built with an
+    unchecked ``//`` is just as wrong when it reaches the kernel through
+    a grid-spec object as through the ``grid=`` kwarg."""
     for node in ast.walk(func):
-        if isinstance(node, ast.Call) \
-                and isinstance(node.func, ast.Attribute) \
-                and node.func.attr == "pallas_call":
+        if not isinstance(node, ast.Call):
+            continue
+        callee = node.func
+        name = callee.attr if isinstance(callee, ast.Attribute) else (
+            callee.id if isinstance(callee, ast.Name) else "")
+        if name == "pallas_call" or name.endswith("GridSpec"):
             return True
     return False
 

@@ -19,6 +19,14 @@ Non-dividing Sk is handled by zero-padding K/V up to a block multiple in
 the wrapper; the pad region sits beyond every ``kv_len`` so the masking
 covers it.  The grid divisibility is asserted after padding (expolint
 pallas-rules).
+
+``decode_attention_paged`` is the same online-softmax loop over a *paged*
+KV pool: K/V live as [num_pages, page_size, K, D] blocks shared by all
+slots, and each slot's page table row is scalar-prefetched to SMEM so the
+BlockSpec index maps can steer the K/V DMA through it — the kernel reads
+exactly the pages a slot owns, never a dense [B, Smax] stripe.  The grid
+is (batch, kv_heads, pages-per-slot); whole pages past ``kv_len`` are
+skipped with ``pl.when`` and the final partial page is masked by kpos.
 """
 from __future__ import annotations
 
@@ -126,4 +134,112 @@ def decode_attention(q, k, v, kv_len, *, scale: float | None = None,
         ),
         interpret=interpret,
     )(lens, qg, k, v)
+    return out.reshape(Bsz, H, Dv)
+
+
+def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale: float, page_size: int):
+    b = pl.program_id(0)
+    ip = pl.program_id(2)
+    npg = pl.num_programs(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kv_len = len_ref[b]
+    k_start = ip * page_size
+
+    @pl.when(k_start < kv_len)
+    def _compute():
+        q = q_ref[0, 0, :, :].astype(jnp.float32)            # [G, D]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # [ps, D]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale       # [G, ps]
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < kv_len, s, NEG_INF)
+
+        m_prev, l_prev = m_scr[...], l_scr[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)            # [ps, Dv]
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ip == npg - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0, :, :] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_paged(q, k_pool, v_pool, page_table, kv_len, *,
+                           scale: float | None = None,
+                           interpret: bool = False):
+    """Sq=1 GQA decode attention against a paged KV pool.
+
+    q: [B, H, D]; k_pool: [P, ps, K, D]; v_pool: [P, ps, K, Dv];
+    page_table: [B, W] int32 (physical page backing each slot's logical
+    page — prefetched to SMEM and read by the K/V index maps, so only a
+    slot's own pages are ever DMA'd); kv_len: [B] int32 (position p
+    attended iff p < kv_len; stale rows of partially-filled or
+    unallocated pages are masked).  The page dimension is the innermost
+    'arbitrary' grid axis — no ``//`` feeds the grid, the page-table
+    width *is* the page count.  Returns [B, H, Dv]."""
+    Bsz, H, D = q.shape
+    page_size, K = k_pool.shape[1], k_pool.shape[2]
+    Dv = v_pool.shape[-1]
+    assert H % K == 0, (H, K)
+    G = H // K
+    scale = D ** -0.5 if scale is None else scale
+    W = page_table.shape[1]
+    grid = (Bsz, K, W)
+
+    qg = q.reshape(Bsz, K, G, D)
+    # unmapped entries hold an out-of-range sentinel; clamp so the K/V
+    # index maps never DMA past the pool (the rows are masked anyway)
+    pt = jnp.minimum(jnp.asarray(page_table, jnp.int32),
+                     k_pool.shape[0] - 1)
+    lens = jnp.asarray(kv_len, jnp.int32)
+    kernel = functools.partial(_paged_kernel, scale=scale,
+                               page_size=page_size)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,      # page_table + kv_len land in SMEM
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda b, h, ip, pt, lens: (b, h, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, D),
+                         lambda b, h, ip, pt, lens: (pt[b, ip], 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, Dv),
+                         lambda b, h, ip, pt, lens: (pt[b, ip], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dv),
+                               lambda b, h, ip, pt, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, Dv), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Bsz, K, G, Dv), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(pt, lens, qg, k_pool, v_pool)
     return out.reshape(Bsz, H, Dv)

@@ -70,6 +70,27 @@ def decode_attention(q, k, v, kv_len, *, scale: float | None = None,
                                interpret=(mode == "interpret"))
 
 
+def decode_attention_paged(q, k_pool, v_pool, page_table, kv_len, *,
+                           scale: float | None = None):
+    """Sq=1 GQA decode attention against a paged KV pool.
+
+    q: [B,H,D], k_pool/v_pool: [P,ps,K,D/Dv], page_table: [B,W] int32,
+    kv_len: [B] int32 -> [B,H,Dv].  Same dispatch policy as
+    ``decode_attention``: the pure-jnp reference (page gather + ragged
+    dense attention) on non-TPU backends, the page-table Pallas kernel
+    (scalar-prefetched tables steering the K/V DMA) on TPU or under
+    ``REPRO_PALLAS=interpret``."""
+    mode = _mode()
+    if mode in ("ref", "naive"):
+        return ref.decode_attention_paged_ref(q, k_pool, v_pool, page_table,
+                                              kv_len, scale=scale)
+    from repro.kernels import decode_attention as dk
+
+    return dk.decode_attention_paged(q, k_pool, v_pool, page_table, kv_len,
+                                     scale=scale,
+                                     interpret=(mode == "interpret"))
+
+
 def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 64, h0=None,
              return_final_state: bool = False):
     """Mamba-2 SSD chunked scan. See kernels.ref.ssd_chunked_ref."""

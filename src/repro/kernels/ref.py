@@ -68,6 +68,41 @@ def decode_attention_ref(
     return out.reshape(B, H, v.shape[-1]).astype(q.dtype)
 
 
+def gather_pages(pool: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Materialise a slot-major view of a paged pool.
+
+    pool: [num_pages, page_size, ...]; page_table: [B, W] int32 (physical
+    page backing each slot's logical page).  Returns [B, W*page_size, ...]
+    where row ``j`` of slot ``b`` is token position ``j`` — the dense
+    layout the non-paged reference kernels expect.  Rows past a slot's
+    live length are stale pool contents; callers mask them by kv_len.
+    Unmapped table entries hold an out-of-range sentinel — clamp instead
+    of jnp.take's default NaN fill (0 * NaN would poison the masked
+    matmul rows)."""
+    B, W = page_table.shape
+    pt = jnp.minimum(page_table, pool.shape[0] - 1)
+    g = jnp.take(pool, pt, axis=0)                  # [B, W, ps, ...]
+    return g.reshape(B, W * pool.shape[1], *pool.shape[2:])
+
+
+def decode_attention_paged_ref(
+    q: jax.Array,           # [B, H, D]
+    k_pool: jax.Array,      # [P, ps, K, D]
+    v_pool: jax.Array,      # [P, ps, K, Dv]
+    page_table: jax.Array,  # [B, W] int32
+    kv_len: jax.Array,      # [B] int32
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    """Paged Sq=1 decode attention: gather the slot's pages into a dense
+    [B, W*ps, ...] view, then run the ragged dense reference.  Matches
+    ``kernels/decode_attention.py::decode_attention_paged``.
+    Returns [B, H, Dv]."""
+    k = gather_pages(k_pool, page_table)
+    v = gather_pages(v_pool, page_table)
+    return decode_attention_ref(q, k, v, kv_len, scale=scale)
+
+
 # ---------------------------------------------------------------------------
 # Mamba-2 SSD (state-space duality) — chunked reference
 # ---------------------------------------------------------------------------

@@ -34,6 +34,15 @@ def main(argv=None):
                          "one-token-per-step prompt forcing)")
     ap.add_argument("--max-prefill-tokens-per-sync", type=int, default=None,
                     help="admission budget on prefill work per sync")
+    ap.add_argument("--kv-layout", choices=["dense", "paged"],
+                    default="dense",
+                    help="dense: per-slot max_seq KV stripes; paged: "
+                         "shared page pool with memory-aware admission")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV rows per page (paged layout)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="pool size in pages (paged layout; default "
+                         "slots * ceil(max_seq/page_size))")
     args = ap.parse_args(argv)
 
     from repro.configs import get_config, reduced_config
@@ -49,7 +58,9 @@ def main(argv=None):
         rng_seed=args.seed, mode=args.mode,
         steps_per_sync=args.steps_per_sync,
         prefill_chunk=args.prefill_chunk,
-        max_prefill_tokens_per_sync=args.max_prefill_tokens_per_sync)
+        max_prefill_tokens_per_sync=args.max_prefill_tokens_per_sync,
+        kv_layout=args.kv_layout, page_size=args.page_size,
+        num_pages=args.num_pages)
     rng = np.random.default_rng(args.seed)
     reqs = []
     for _ in range(args.requests):
@@ -67,6 +78,12 @@ def main(argv=None):
     print(f"[launch.serve] {args.arch}: {args.requests} requests, "
           f"{total} tokens in {steps} steps / {dt:.1f}s "
           f"({total/dt:.1f} tok/s, {args.slots} slots, {args.mode} mode)")
+    if args.kv_layout == "paged":
+        ks = eng.kv_stats()
+        print(f"[launch.serve] paged KV: {ks['num_pages']} pages x "
+              f"{ks['page_size']} rows, high water {ks['high_water']}, "
+              f"{ks['preemptions']} preemptions, "
+              f"{ks['rejected']} rejected")
 
 
 if __name__ == "__main__":

@@ -70,6 +70,103 @@ def make_kv_cache(cfg, batch: int, max_seq: int, stack: tuple = ()):
     }
 
 
+def make_kv_cache_paged(cfg, num_pages: int, page_size: int,
+                        stack: tuple = ()):
+    """Descriptor tree for a *paged* KV cache: a pool of
+    ``num_pages × page_size`` token rows shared by every slot, indexed
+    through per-slot page tables instead of a dense ``batch × max_seq``
+    stripe.  No ``batch`` axis — resident memory is decoupled from
+    slots × max_seq."""
+    lead = tuple(stack)
+    lead_logical = (None,) * len(lead)
+    shape = (*lead, num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+    logical = (*lead_logical, None, "seq_kv", "kv_heads", None)
+    return {
+        "k": Param(shape, logical, init="zeros", dtype=cfg.dtype),
+        "v": Param(shape, logical, init="zeros", dtype=cfg.dtype),
+    }
+
+
+def _paged_rows(pool):
+    """Flatten [P, ps, ...] pool to [(P*ps), ...] token rows."""
+    P, ps = pool.shape[0], pool.shape[1]
+    return pool.reshape(P * ps, *pool.shape[2:])
+
+
+def paged_write_rows(pool, page_table, positions, values, active=None):
+    """Scatter per-token rows through a page table.
+
+    pool: [P, ps, ...]; page_table: [B, W] int32; positions: [B] or
+    [B, C] int32 logical token positions; values: rows matching
+    ``positions`` with trailing dims of the pool; active: optional [B]
+    bool — inactive slots' writes are dropped (their stale table entries
+    may point at pages now owned by other slots, so the drop is a
+    correctness requirement, not an optimisation)."""
+    P, ps = pool.shape[0], pool.shape[1]
+    W = page_table.shape[1]
+    B = page_table.shape[0]
+    logical_pg = jnp.clip(positions // ps, 0, W - 1)
+    if positions.ndim == 1:
+        phys = page_table[jnp.arange(B), logical_pg]            # [B]
+        amask = active if active is not None else None
+    else:
+        phys = page_table[jnp.arange(B)[:, None], logical_pg]   # [B, C]
+        amask = active[:, None] if active is not None else None
+    flat = phys * ps + positions % ps
+    if amask is not None:
+        flat = jnp.where(amask, flat, P * ps)   # out of range -> dropped
+    rows = _paged_rows(pool).at[flat].set(values, mode="drop")
+    return rows.reshape(pool.shape)
+
+
+def apply_attention_decode_paged(cfg, p, x, cache, pos, page_table,
+                                 active=None):
+    """One-token decode against the paged pool.  x: [B, 1, d]; cache:
+    {k,v: [P, ps, K, hd]}; pos: [B] int32; page_table: [B, W] int32
+    (traced — constant within a fused sync, updated by the engine's
+    allocator between syncs); active: optional [B] bool.
+    Returns (out, new_cache)."""
+    B = x.shape[0]
+    q, k_new, v_new = _qkv(cfg, p, x, pos[:, None])
+    k = paged_write_rows(cache["k"], page_table, pos, k_new[:, 0], active)
+    v = paged_write_rows(cache["v"], page_table, pos, v_new[:, 0], active)
+    out = ops.decode_attention_paged(q[:, 0], k, v, page_table, pos + 1,
+                                     scale=cfg.head_dim ** -0.5)
+    out = out.reshape(B, 1, cfg.q_dim)
+    return out @ p["wo"], {"k": k, "v": v}
+
+
+def apply_attention_prefill_chunk_paged(cfg, p, x, cache, start, page_table,
+                                        active=None):
+    """Batched C-token prefill through the page table.  Same contract as
+    ``apply_attention_prefill_chunk`` with the dense stripe replaced by
+    the pool: KV rows scatter to ``table[b, pos//ps]*ps + pos%ps`` and
+    the chunk attends to the slot's gathered pages under the usual
+    kpos <= start+q mask (stale rows of unwritten pages sit beyond the
+    mask).  Returns (out [B, C, d], new_cache)."""
+    from repro.kernels.ref import gather_pages
+
+    B, C, _ = x.shape
+    positions = start[:, None] + jnp.arange(C)[None, :]         # [B, C]
+    q, k_new, v_new = _qkv(cfg, p, x, positions)
+    k = paged_write_rows(cache["k"], page_table, positions, k_new, active)
+    v = paged_write_rows(cache["v"], page_table, positions, v_new, active)
+    kg = gather_pages(k, page_table)                   # [B, W*ps, K, hd]
+    vg = gather_pages(v, page_table)
+    smax = kg.shape[1]
+    K = kg.shape[2]
+    G = cfg.num_heads // K
+    qg = q.reshape(B, C, K, G, cfg.head_dim).astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, kg.astype(jnp.float32))
+    scores = scores * (cfg.head_dim ** -0.5)
+    mask = jnp.arange(smax)[None, None, :] <= positions[:, :, None]
+    scores = jnp.where(mask[:, None, None, :, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, vg.astype(jnp.float32))
+    out = out.reshape(B, C, cfg.q_dim).astype(x.dtype)
+    return out @ p["wo"], {"k": k, "v": v}
+
+
 def apply_attention_prefill_chunk(cfg, p, x, cache, start, active=None):
     """Batched prefill of a C-token chunk into the KV cache.
 

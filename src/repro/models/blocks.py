@@ -101,16 +101,38 @@ def make_block_cache(cfg, mixer: str, batch: int, max_seq: int,
     return mamba_mod.make_mamba_cache(cfg, batch, stack)
 
 
+def make_block_cache_paged(cfg, mixer: str, batch: int, num_pages: int,
+                           page_size: int, stack: tuple = ()):
+    """Paged-layout block cache: attention/MLA KV rides the shared page
+    pool; mamba/SSM slots keep their O(1) dense per-slot state (it has no
+    sequence axis to page)."""
+    if mixer == "attn":
+        return attn_mod.make_kv_cache_paged(cfg, num_pages, page_size, stack)
+    if mixer == "mla":
+        return mla_mod.make_mla_cache_paged(cfg, num_pages, page_size, stack)
+    return mamba_mod.make_mamba_cache(cfg, batch, stack)
+
+
 def apply_block_decode(cfg, p, h, cache, pos, mixer: str, ffn: str,
-                       active=None):
-    """One-token decode. Returns (h, new_cache)."""
+                       active=None, page_table=None):
+    """One-token decode. ``page_table`` not None selects the paged cache
+    layout for attention/MLA mixers (mamba state is dense either way).
+    Returns (h, new_cache)."""
     x = rmsnorm(h, p["ln1"], cfg.norm_eps)
     if mixer == "attn":
-        r, new_cache = attn_mod.apply_attention_decode(cfg, p["mixer"], x,
-                                                       cache, pos, active)
+        r, new_cache = (attn_mod.apply_attention_decode_paged(
+                            cfg, p["mixer"], x, cache, pos, page_table,
+                            active)
+                        if page_table is not None
+                        else attn_mod.apply_attention_decode(
+                            cfg, p["mixer"], x, cache, pos, active))
     elif mixer == "mla":
-        r, new_cache = mla_mod.apply_mla_decode(cfg, p["mixer"], x, cache,
-                                                pos, active)
+        r, new_cache = (mla_mod.apply_mla_decode_paged(
+                            cfg, p["mixer"], x, cache, pos, page_table,
+                            active)
+                        if page_table is not None
+                        else mla_mod.apply_mla_decode(cfg, p["mixer"], x,
+                                                      cache, pos, active))
     else:
         r, new_cache = mamba_mod.apply_mamba_decode(cfg, p["mixer"], x, cache,
                                                     pos, active)
@@ -128,16 +150,25 @@ def apply_block_decode(cfg, p, h, cache, pos, mixer: str, ffn: str,
 
 
 def apply_block_prefill_chunk(cfg, p, h, cache, start, mixer: str, ffn: str,
-                              active=None):
+                              active=None, page_table=None):
     """Chunked prefill through one block. h: [B, C, d]; start: [B] int32
-    per-slot cache offset of the chunk. Returns (h, new_cache)."""
+    per-slot cache offset of the chunk; ``page_table`` not None selects
+    the paged layout for attention/MLA. Returns (h, new_cache)."""
     x = rmsnorm(h, p["ln1"], cfg.norm_eps)
     if mixer == "attn":
-        r, new_cache = attn_mod.apply_attention_prefill_chunk(
-            cfg, p["mixer"], x, cache, start, active)
+        r, new_cache = (attn_mod.apply_attention_prefill_chunk_paged(
+                            cfg, p["mixer"], x, cache, start, page_table,
+                            active)
+                        if page_table is not None
+                        else attn_mod.apply_attention_prefill_chunk(
+                            cfg, p["mixer"], x, cache, start, active))
     elif mixer == "mla":
-        r, new_cache = mla_mod.apply_mla_prefill_chunk(
-            cfg, p["mixer"], x, cache, start, active)
+        r, new_cache = (mla_mod.apply_mla_prefill_chunk_paged(
+                            cfg, p["mixer"], x, cache, start, page_table,
+                            active)
+                        if page_table is not None
+                        else mla_mod.apply_mla_prefill_chunk(
+                            cfg, p["mixer"], x, cache, start, active))
     else:
         r, new_cache = mamba_mod.apply_mamba_prefill_chunk(
             cfg, p["mixer"], x, cache, start, active)
@@ -241,13 +272,25 @@ def make_super_block_cache(cfg, plan: HybridPlan, batch: int, max_seq: int,
     return c
 
 
+def make_super_block_cache_paged(cfg, plan: HybridPlan, batch: int,
+                                 num_pages: int, page_size: int,
+                                 stack: tuple = ()):
+    c = {}
+    for group, n in plan.group_sizes.items():
+        mixer, _ = group.split("_")
+        c[group] = make_block_cache_paged(cfg, mixer, batch, num_pages,
+                                          page_size, stack=(*stack, n))
+    return c
+
+
 def apply_super_block_prefill_chunk(cfg, p, h, cache, start,
-                                    plan: HybridPlan, active=None):
+                                    plan: HybridPlan, active=None,
+                                    page_table=None):
     new_cache = {g: [None] * n for g, n in plan.group_sizes.items()}
     for group, idx, mixer, ffn in plan.entries:
         h, nc = apply_block_prefill_chunk(
             cfg, take_layer(p[group], idx), h, take_layer(cache[group], idx),
-            start, mixer, ffn, active)
+            start, mixer, ffn, active, page_table)
         new_cache[group][idx] = nc
     stacked = {}
     for g, lst in new_cache.items():
@@ -257,12 +300,12 @@ def apply_super_block_prefill_chunk(cfg, p, h, cache, start,
 
 
 def apply_super_block_decode(cfg, p, h, cache, pos, plan: HybridPlan,
-                             active=None):
+                             active=None, page_table=None):
     new_cache = {g: [None] * n for g, n in plan.group_sizes.items()}
     for group, idx, mixer, ffn in plan.entries:
         h, nc = apply_block_decode(
             cfg, take_layer(p[group], idx), h, take_layer(cache[group], idx),
-            pos, mixer, ffn, active)
+            pos, mixer, ffn, active, page_table)
         new_cache[group][idx] = nc
     # restack each group's caches along the leading dim
     stacked = {}

@@ -278,16 +278,33 @@ def prefill(cfg, params, batch, *, unroll: bool = False):
     return logits, caches
 
 
-def make_cache(cfg, batch_size: int, max_seq: int):
-    """Descriptor tree for the decode cache (one entry per segment)."""
+def make_cache(cfg, batch_size: int, max_seq: int,
+               paged: tuple[int, int] | None = None):
+    """Descriptor tree for the decode cache (one entry per segment).
+
+    ``paged=(num_pages, page_size)`` selects the paged layout: KV leaves
+    become shared ``[num_pages, page_size, ...]`` pools addressed through
+    per-slot page tables (``batch["page_table"]`` at apply time) instead
+    of dense ``[batch, max_seq, ...]`` stripes; SSM/conv state keeps its
+    dense O(1) per-slot layout in both."""
     out = []
     for seg in segments(cfg):
         if seg.kind == "hybrid":
-            out.append(B.make_super_block_cache(cfg, seg.plan, batch_size,
-                                                max_seq, stack=(seg.count,)))
+            out.append(B.make_super_block_cache_paged(
+                           cfg, seg.plan, batch_size, *paged,
+                           stack=(seg.count,))
+                       if paged is not None
+                       else B.make_super_block_cache(
+                           cfg, seg.plan, batch_size, max_seq,
+                           stack=(seg.count,)))
         else:
-            out.append(B.make_block_cache(cfg, seg.mixer, batch_size, max_seq,
-                                          stack=(seg.count,)))
+            out.append(B.make_block_cache_paged(
+                           cfg, seg.mixer, batch_size, *paged,
+                           stack=(seg.count,))
+                       if paged is not None
+                       else B.make_block_cache(
+                           cfg, seg.mixer, batch_size, max_seq,
+                           stack=(seg.count,)))
     return out
 
 
@@ -298,9 +315,11 @@ def prefill_chunk(cfg, params, batch, cache, *, unroll: bool = False):
     the chunk's first token), optional active [B] bool (inactive slots'
     caches pass through untouched).  No head/logits — admission runs this
     to warm the cache; the first sampled token always comes from the
-    decode path.  Returns new_cache only."""
+    decode path.  Optional ``page_table`` [B, W] int32 selects the paged
+    cache layout.  Returns new_cache only."""
     tokens, start = batch["tokens"], batch["start"]
     active = batch.get("active")
+    page_table = batch.get("page_table")
     h = embed_tokens(cfg, params, tokens, batch)
     new_caches = []
     for seg, seg_params, seg_cache in zip(segments(cfg), params["segments"],
@@ -309,11 +328,12 @@ def prefill_chunk(cfg, params, batch, cache, *, unroll: bool = False):
             hh = carry
             layer_p, layer_c = xs
             hh, nc = (B.apply_super_block_prefill_chunk(
-                          cfg, layer_p, hh, layer_c, start, seg.plan, active)
+                          cfg, layer_p, hh, layer_c, start, seg.plan, active,
+                          page_table)
                       if seg.kind == "hybrid"
                       else B.apply_block_prefill_chunk(
                           cfg, layer_p, hh, layer_c, start, seg.mixer,
-                          seg.ffn, active))
+                          seg.ffn, active, page_table))
             return hh, nc
 
         h, new_c = jax.lax.scan(body, h, (seg_params, seg_cache),
@@ -323,10 +343,12 @@ def prefill_chunk(cfg, params, batch, cache, *, unroll: bool = False):
 
 
 def decode_step(cfg, params, batch, cache, *, unroll: bool = False):
-    """One decode step. batch: tokens [B,1(,cb)], pos [B] int32.
+    """One decode step. batch: tokens [B,1(,cb)], pos [B] int32, optional
+    page_table [B, W] int32 (paged cache layout).
     Returns (logits [B, V(,cb)], new_cache)."""
     tokens, pos = batch["tokens"], batch["pos"]
     active = batch.get("active")
+    page_table = batch.get("page_table")
     h = embed_tokens(cfg, params, tokens, batch)
     new_caches = []
     for seg, seg_params, seg_cache in zip(segments(cfg), params["segments"],
@@ -335,11 +357,12 @@ def decode_step(cfg, params, batch, cache, *, unroll: bool = False):
             hh = carry
             layer_p, layer_c = xs
             hh, nc = (B.apply_super_block_decode(cfg, layer_p, hh, layer_c,
-                                                 pos, seg.plan, active)
+                                                 pos, seg.plan, active,
+                                                 page_table)
                       if seg.kind == "hybrid"
                       else B.apply_block_decode(cfg, layer_p, hh, layer_c,
                                                 pos, seg.mixer, seg.ffn,
-                                                active))
+                                                active, page_table))
             return hh, nc
 
         h, new_c = jax.lax.scan(body, h, (seg_params, seg_cache),

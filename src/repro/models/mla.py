@@ -90,6 +90,96 @@ def make_mla_cache(cfg, batch: int, max_seq: int, stack: tuple = ()):
     }
 
 
+def make_mla_cache_paged(cfg, num_pages: int, page_size: int,
+                         stack: tuple = ()):
+    """Paged latent cache: (ckv, kpe) pools of ``num_pages × page_size``
+    rows shared by every slot through per-slot page tables."""
+    m = cfg.mla
+    lead = tuple(stack)
+    ll = (None,) * len(lead)
+    return {
+        "ckv": Param((*lead, num_pages, page_size, m.kv_lora_rank),
+                     (*ll, None, "seq_kv", None), init="zeros",
+                     dtype=cfg.dtype),
+        "kpe": Param((*lead, num_pages, page_size, m.qk_rope_head_dim),
+                     (*ll, None, "seq_kv", None), init="zeros",
+                     dtype=cfg.dtype),
+    }
+
+
+def apply_mla_prefill_chunk_paged(cfg, p, x, cache, start, page_table,
+                                  active=None):
+    """Weight-absorbed chunk prefill into the paged latent pools.  Same
+    contract as ``apply_mla_prefill_chunk`` with the dense stripe
+    replaced by page-table scatter + gather (stale rows sit beyond the
+    causal mask)."""
+    from repro.kernels.ref import gather_pages
+    from repro.models.attention import paged_write_rows
+
+    B, C, _ = x.shape
+    m, H = cfg.mla, cfg.num_heads
+    positions = start[:, None] + jnp.arange(C)[None, :]          # [B, C]
+    q_nope, q_pe = _queries(cfg, p, x, positions)                # [B,C,H,*]
+    ckv_new, kpe_new = _latent_kv(cfg, p, x, positions)
+    ckv = paged_write_rows(cache["ckv"], page_table, positions, ckv_new,
+                           active)
+    kpe = paged_write_rows(cache["kpe"], page_table, positions, kpe_new,
+                           active)
+    ckv_g = gather_pages(ckv, page_table)                 # [B, W*ps, r]
+    kpe_g = gather_pages(kpe, page_table)
+    smax = ckv_g.shape[1]
+    wuk = p["wuk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                       wuk.astype(jnp.float32))
+    scores = jnp.einsum("bqhr,bsr->bhqs", q_lat, ckv_g.astype(jnp.float32))
+    scores += jnp.einsum("bqhd,bsd->bhqs", q_pe.astype(jnp.float32),
+                         kpe_g.astype(jnp.float32))
+    scores *= (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    mask = jnp.arange(smax)[None, None, :] <= positions[:, :, None]
+    scores = jnp.where(mask[:, None, :, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", probs, ckv_g.astype(jnp.float32))
+    wuv = p["wuv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bqhr,rhd->bqhd", o_lat, wuv.astype(jnp.float32))
+    out = out.reshape(B, C, H * m.v_head_dim).astype(x.dtype)
+    return out @ p["wo"], {"ckv": ckv, "kpe": kpe}
+
+
+def apply_mla_decode_paged(cfg, p, x, cache, pos, page_table, active=None):
+    """Weight-absorbed one-token decode against the paged latent pools.
+    x: [B,1,d]; cache {ckv: [P,ps,r], kpe: [P,ps,rope]}; pos: [B];
+    page_table: [B,W] int32; active: optional [B] bool."""
+    from repro.kernels.ref import gather_pages
+    from repro.models.attention import paged_write_rows
+
+    B = x.shape[0]
+    m, H = cfg.mla, cfg.num_heads
+    q_nope, q_pe = _queries(cfg, p, x, pos[:, None])  # [B,1,H,*]
+    ckv_new, kpe_new = _latent_kv(cfg, p, x, pos[:, None])
+    ckv = paged_write_rows(cache["ckv"], page_table, pos, ckv_new[:, 0],
+                           active)
+    kpe = paged_write_rows(cache["kpe"], page_table, pos, kpe_new[:, 0],
+                           active)
+    ckv_g = gather_pages(ckv, page_table)                 # [B, W*ps, r]
+    kpe_g = gather_pages(kpe, page_table)
+    smax = ckv_g.shape[1]
+    wuk = p["wuk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       wuk.astype(jnp.float32))
+    scores = jnp.einsum("bhr,bsr->bhs", q_lat, ckv_g.astype(jnp.float32))
+    scores += jnp.einsum("bhd,bsd->bhs", q_pe[:, 0].astype(jnp.float32),
+                         kpe_g.astype(jnp.float32))
+    scores *= (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    mask = jnp.arange(smax)[None, :] <= pos[:, None]
+    scores = jnp.where(mask[:, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", probs, ckv_g.astype(jnp.float32))
+    wuv = p["wuv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bhr,rhd->bhd", o_lat, wuv.astype(jnp.float32))
+    out = out.reshape(B, 1, H * m.v_head_dim).astype(x.dtype)
+    return out @ p["wo"], {"ckv": ckv, "kpe": kpe}
+
+
 def apply_mla_prefill_chunk(cfg, p, x, cache, start, active=None):
     """Weight-absorbed prefill of a C-token chunk into the latent cache.
 

@@ -1,0 +1,18 @@
+"""Fixture: unchecked // feeding a grid through PrefetchScalarGridSpec.
+
+No direct ``pallas_call`` in the offending function — the grid reaches
+the kernel via the grid-spec object, which the pallas-rules divisibility
+check must still catch.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+
+def bad_paged_grid(k_pool, page_size=16):
+    Smax = k_pool.shape[0] * k_pool.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Smax // page_size,),
+        in_specs=[],
+        out_specs=None,
+    )
+    return grid_spec

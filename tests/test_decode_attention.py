@@ -9,8 +9,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.decode_attention import decode_attention
-from repro.kernels.ref import decode_attention_ref
+from repro.kernels.decode_attention import (decode_attention,
+                                            decode_attention_paged)
+from repro.kernels.ref import (decode_attention_paged_ref,
+                               decode_attention_ref, gather_pages)
 
 
 def _inputs(B, Sk, H, K, D, seed=0):
@@ -79,5 +81,95 @@ def test_ops_dispatch_ref_matches_kernel(monkeypatch):
     via_ref = ops.decode_attention(q, k, v, kv_len)
     monkeypatch.setenv("REPRO_PALLAS", "interpret")
     via_kernel = ops.decode_attention(q, k, v, kv_len)
+    np.testing.assert_allclose(np.asarray(via_kernel), np.asarray(via_ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged variant: K/V live in a [P, ps, K, D] pool, steered by page tables
+# ---------------------------------------------------------------------------
+def _paged_inputs(B, W, ps, H, K, D, num_pages, seed=0):
+    """Pool + *shuffled* page tables: each slot's pages are scattered over
+    the pool so physical contiguity can't mask indexing bugs."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, H, D), jnp.float32)
+    k_pool = jax.random.normal(ks[1], (num_pages, ps, K, D), jnp.float32)
+    v_pool = jax.random.normal(ks[2], (num_pages, ps, K, D), jnp.float32)
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(num_pages)[:B * W]
+    table = jnp.asarray(perm.reshape(B, W).astype(np.int32))
+    return q, k_pool, v_pool, table
+
+
+@pytest.mark.parametrize("H,K", [(4, 4), (8, 2), (8, 1)])
+def test_paged_matches_paged_ref(H, K):
+    B, W, ps, D = 2, 4, 8, 32
+    q, kp, vp, pt = _paged_inputs(B, W, ps, H, K, D, num_pages=16)
+    kv_len = jnp.array([W * ps, 11], jnp.int32)   # full + partial last page
+    got = decode_attention_paged(q, kp, vp, pt, kv_len, interpret=True)
+    ref = decode_attention_paged_ref(q, kp, vp, pt, kv_len)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_matches_dense_on_gathered_layout():
+    """The paged kernel over a shuffled table must equal the dense ref over
+    the gathered [B, W*ps, K, D] view — same math, different addressing."""
+    B, W, ps, H, K, D = 3, 5, 4, 8, 2, 16
+    q, kp, vp, pt = _paged_inputs(B, W, ps, H, K, D, num_pages=32, seed=1)
+    kv_len = jnp.array([1, 7, 20], jnp.int32)
+    got = decode_attention_paged(q, kp, vp, pt, kv_len, interpret=True)
+    ref = decode_attention_ref(q, gather_pages(kp, pt),
+                               gather_pages(vp, pt), kv_len)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_masks_unwritten_page_tail():
+    """Rows past kv_len — the unfilled tail of the last page and whole
+    unread pages — must not influence the output, even when poisoned."""
+    B, W, ps, H, K, D = 2, 4, 8, 4, 2, 16
+    q, kp, vp, pt = _paged_inputs(B, W, ps, H, K, D, num_pages=16, seed=2)
+    kv_len = jnp.array([5, 13], jnp.int32)
+    base = decode_attention_paged(q, kp, vp, pt, kv_len, interpret=True)
+    # poison every row of every page, then restore only the live prefixes
+    kp2, vp2 = kp, vp
+    for b in range(B):
+        live = int(kv_len[b])
+        for j in range(W):
+            lo, hi = j * ps, min((j + 1) * ps, live)
+            pg = int(pt[b, j])
+            keep_k = kp[pg, :max(0, hi - lo)]
+            keep_v = vp[pg, :max(0, hi - lo)]
+            kp2 = kp2.at[pg].set(1e4).at[pg, :max(0, hi - lo)].set(keep_k)
+            vp2 = vp2.at[pg].set(-1e4).at[pg, :max(0, hi - lo)].set(keep_v)
+    got = decode_attention_paged(q, kp2, vp2, pt, kv_len, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+
+def test_paged_sentinel_table_entries_are_safe():
+    """Unmapped table entries hold the out-of-range sentinel num_pages;
+    both kernel and ref must clamp (not NaN-fill) since those rows sit
+    beyond kv_len anyway."""
+    B, W, ps, H, K, D = 2, 4, 4, 4, 2, 16
+    q, kp, vp, pt = _paged_inputs(B, W, ps, H, K, D, num_pages=8, seed=3)
+    kv_len = jnp.array([3, 6], jnp.int32)
+    pt = pt.at[0, 1:].set(8).at[1, 2:].set(8)      # sentinel == num_pages
+    got = decode_attention_paged(q, kp, vp, pt, kv_len, interpret=True)
+    ref = decode_attention_paged_ref(q, kp, vp, pt, kv_len)
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_ops_dispatch_paged(monkeypatch):
+    from repro.kernels import ops
+    B, W, ps, H, K, D = 2, 3, 8, 4, 2, 16
+    q, kp, vp, pt = _paged_inputs(B, W, ps, H, K, D, num_pages=8, seed=4)
+    kv_len = jnp.array([9, 24], jnp.int32)
+    monkeypatch.setenv("REPRO_PALLAS", "ref")
+    via_ref = ops.decode_attention_paged(q, kp, vp, pt, kv_len)
+    monkeypatch.setenv("REPRO_PALLAS", "interpret")
+    via_kernel = ops.decode_attention_paged(q, kp, vp, pt, kv_len)
     np.testing.assert_allclose(np.asarray(via_kernel), np.asarray(via_ref),
                                atol=2e-5, rtol=2e-5)

@@ -20,6 +20,7 @@ CASES = [
     ("snapshot_bad", "snapshot-completeness", "snapshot()"),
     ("seq_bad", "seq-discipline", "srv_seq"),
     ("pallas_bad", "pallas-rules", "divisibility"),
+    ("pallas_paged_bad", "pallas-rules", "divisibility"),
     ("shard_bad", "snapshot-completeness", "snapshot()"),
     ("shard_bad", "core-purity", "wall-clock"),
 ]

@@ -1,0 +1,83 @@
+"""KV page-pool allocator: free-list accounting, lazy growth, O(1) free."""
+import pytest
+
+from repro.serve.kv_pool import KVPool, PoolExhausted
+
+
+def test_geometry_and_initial_state():
+    pool = KVPool(num_pages=8, page_size=4, slots=2, max_seq=16)
+    assert pool.width == 4
+    assert pool.used_pages == 0
+    assert pool.free_pages == 8
+    assert (pool.table == 8).all()          # sentinel: nothing mapped
+
+
+def test_width_rounds_up_for_non_dividing_page_size():
+    pool = KVPool(num_pages=10, page_size=6, slots=1, max_seq=16)
+    assert pool.width == 3                  # ceil(16/6)
+
+
+def test_alloc_grows_lazily_and_is_idempotent():
+    pool = KVPool(num_pages=8, page_size=4, slots=2, max_seq=16)
+    fresh = pool.alloc(0, 5)                # rows 0..5 -> pages 0..1
+    assert len(fresh) == 2
+    assert pool.footprint(0) == 2
+    assert pool.needed(0, 5) == 0
+    assert pool.alloc(0, 5) == []           # already backed
+    fresh = pool.alloc(0, 6)                # crosses into page 2? no: 6//4=1
+    assert fresh == []
+    fresh = pool.alloc(0, 8)                # row 8 -> logical page 2
+    assert len(fresh) == 1
+
+
+def test_pages_for_and_can_admit():
+    pool = KVPool(num_pages=4, page_size=4, slots=4, max_seq=16)
+    assert pool.pages_for(1) == 1
+    assert pool.pages_for(4) == 1
+    assert pool.pages_for(5) == 2
+    assert pool.can_admit(16)
+    pool.alloc(0, 11)                       # 3 pages
+    assert pool.can_admit(4)
+    assert not pool.can_admit(5)
+
+
+def test_exhaustion_raises_and_rolls_back():
+    pool = KVPool(num_pages=3, page_size=4, slots=2, max_seq=16)
+    pool.alloc(0, 7)                        # 2 pages
+    with pytest.raises(PoolExhausted):
+        pool.alloc(1, 7)                    # needs 2, only 1 free
+    # failed alloc must not leak partial pages
+    assert pool.free_pages == 1
+    assert pool.footprint(1) == 0
+    assert pool.alloc(1, 3)                 # 1 page still works
+
+
+def test_free_slot_returns_everything():
+    pool = KVPool(num_pages=8, page_size=4, slots=2, max_seq=16)
+    pool.alloc(0, 10)
+    pool.alloc(1, 2)
+    assert pool.used_pages == 4
+    assert pool.free_slot(0) == 3
+    assert pool.used_pages == 1
+    assert (pool.table[0] == 8).all()       # table reset to sentinel
+    assert pool.free_slot(0) == 0           # double-free is a no-op
+
+
+def test_freed_pages_are_reused():
+    pool = KVPool(num_pages=2, page_size=4, slots=2, max_seq=8)
+    a = pool.alloc(0, 7)
+    pool.free_slot(0)
+    b = pool.alloc(1, 7)
+    assert sorted(a) == sorted(b)
+
+
+def test_stats_and_high_water():
+    pool = KVPool(num_pages=8, page_size=4, slots=2, max_seq=16)
+    pool.alloc(0, 11)
+    pool.free_slot(0)
+    pool.alloc(1, 3)
+    s = pool.stats()
+    assert s["high_water"] == 3
+    assert s["used_pages"] == 1
+    assert s["total_allocs"] == 4
+    assert s["total_frees"] == 3

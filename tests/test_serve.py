@@ -177,6 +177,145 @@ def test_host_mode_drains_and_matches_lengths():
     assert all(r.done and len(r.output) == 3 for r in reqs)
 
 
+# ---------------------------------------------------------------------------
+# paged KV layout
+# ---------------------------------------------------------------------------
+def _run_mix(cfg, params, work, **kw):
+    eng = DecodeEngine(cfg, params, **kw)
+    reqs = [Request(prompt=p, max_new_tokens=m) for p, m in work]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+    return [[int(t) for t in r.output] for r in reqs], reqs, eng
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "deepseek-v3-671b",
+                                  "jamba-v0.1-52b"])
+def test_paged_matches_dense_greedy(arch):
+    """Paged KV must reproduce dense greedy token-for-token across plain
+    GQA, MLA, and hybrid attention/SSM stacks, with ragged lengths."""
+    cfg = reduced_config(arch)
+    params = _params(cfg)
+    rng = np.random.default_rng(3)
+    work = [(rng.integers(1, cfg.vocab_size,
+                          int(rng.integers(2, 14))).astype(np.int32),
+             int(rng.integers(3, 8))) for _ in range(5)]
+    kw = dict(batch_slots=3, max_seq=40, steps_per_sync=4)
+    dense, _, _ = _run_mix(cfg, params, work, **kw)
+    paged, reqs, eng = _run_mix(cfg, params, work, kv_layout="paged",
+                                page_size=8, **kw)
+    assert dense == paged
+    assert all(r.done and not r.failed for r in reqs)
+    assert eng.pool.used_pages == 0          # all pages returned on drain
+
+
+def test_paged_non_dividing_page_size():
+    """page_size that divides neither max_seq nor typical lengths: the
+    partial last page must mask correctly end to end."""
+    cfg = reduced_config("smollm-360m")
+    params = _params(cfg)
+    rng = np.random.default_rng(4)
+    work = [(rng.integers(1, cfg.vocab_size,
+                          int(rng.integers(2, 20))).astype(np.int32), 6)
+            for _ in range(4)]
+    kw = dict(batch_slots=2, max_seq=60, steps_per_sync=4)
+    dense, _, _ = _run_mix(cfg, params, work, **kw)
+    paged, _, _ = _run_mix(cfg, params, work, kv_layout="paged",
+                           page_size=7, **kw)
+    assert dense == paged
+
+
+def test_paged_prefill_chunk_matches_dense_chunked():
+    cfg = reduced_config("smollm-360m")
+    params = _params(cfg)
+    rng = np.random.default_rng(6)
+    work = [(rng.integers(1, cfg.vocab_size,
+                          int(rng.integers(9, 20))).astype(np.int32), 4)
+            for _ in range(3)]
+    kw = dict(batch_slots=2, max_seq=64, steps_per_sync=4, prefill_chunk=4)
+    dense, _, _ = _run_mix(cfg, params, work, **kw)
+    paged, _, _ = _run_mix(cfg, params, work, kv_layout="paged",
+                           page_size=8, **kw)
+    assert dense == paged
+
+
+def test_paged_pool_exhaustion_preempts_and_completes():
+    """A pool far too small for the offered load must preempt (youngest
+    first) yet still complete every request exactly once, with outputs
+    identical to dense — at-least-once requeue, no deadlock, no loss."""
+    cfg = reduced_config("smollm-360m")
+    params = _params(cfg)
+    rng = np.random.default_rng(7)
+    work = [(rng.integers(1, cfg.vocab_size,
+                          int(rng.integers(6, 14))).astype(np.int32), 12)
+            for _ in range(8)]
+    kw = dict(batch_slots=4, max_seq=40, steps_per_sync=4)
+    dense, _, _ = _run_mix(cfg, params, work, **kw)
+    # width = ceil(40/8) = 5; 6 pages can't back two long slots at once
+    paged, reqs, eng = _run_mix(cfg, params, work, kv_layout="paged",
+                                page_size=8, num_pages=6, **kw)
+    assert eng.stats["preemptions"] >= 1
+    assert all(r.done and not r.failed for r in reqs)
+    assert [len(o) for o in paged] == [m for _, m in work]  # exactly once
+    assert dense == paged
+
+
+def test_paged_rejects_bad_prompts_and_keeps_serving():
+    """Regression: malformed prompts used to assert-crash the engine.  Now
+    they fail typed and everyone else is served."""
+    cfg = reduced_config("smollm-360m")
+    params = _params(cfg)
+    for layout in ({"kv_layout": "dense"},
+                   {"kv_layout": "paged", "page_size": 8}):
+        eng = DecodeEngine(cfg, params, batch_slots=2, max_seq=16, **layout)
+        empty = Request(prompt=np.zeros((0,), np.int32))
+        good = Request(prompt=np.array([3, 4, 5], np.int32),
+                       max_new_tokens=4)
+        long = Request(prompt=np.ones((16,), np.int32))
+        for r in (empty, good, long):
+            eng.submit(r)
+        eng.run_until_drained()
+        assert empty.failed and "length 0" in empty.fail_reason
+        assert long.failed and "length 16" in long.fail_reason
+        assert good.done and not good.failed and len(good.output) == 4
+        assert eng.stats["rejected"] == 2
+
+
+def test_paged_admission_cost_independent_of_max_seq():
+    """Satellite: dense admission round-trips the whole cache (scales with
+    max_seq on stateful archs); paged touches only O(1) state + the pages
+    actually allocated."""
+    cfg = reduced_config("jamba-v0.1-52b")
+    params = _params(cfg)
+    work = [(np.arange(4, dtype=np.int32) + 1, 2) for _ in range(2)]
+
+    def elems(max_seq, **kw):
+        _, _, eng = _run_mix(cfg, params, work, batch_slots=2,
+                             max_seq=max_seq, steps_per_sync=2, **kw)
+        return eng.stats["admit_cache_elems"]
+
+    d64, d128 = elems(64), elems(128)
+    p64 = elems(64, kv_layout="paged", page_size=8)
+    p128 = elems(128, kv_layout="paged", page_size=8)
+    assert d128 > d64          # dense admission scales with max_seq
+    assert p128 == p64         # paged admission does not
+    assert p64 < d64
+
+
+def test_paged_host_mode_matches_host_dense():
+    cfg = reduced_config("smollm-360m")
+    params = _params(cfg)
+    rng = np.random.default_rng(8)
+    work = [(rng.integers(1, cfg.vocab_size,
+                          int(rng.integers(2, 10))).astype(np.int32), 5)
+            for _ in range(4)]
+    kw = dict(batch_slots=2, max_seq=40, mode="host")
+    dense, _, _ = _run_mix(cfg, params, work, **kw)
+    paged, _, _ = _run_mix(cfg, params, work, kv_layout="paged",
+                           page_size=8, **kw)
+    assert dense == paged
+
+
 def test_musicgen_codebook_outputs():
     cfg, eng = _engine("musicgen-medium", slots=1)
     prompt = np.ones((3, cfg.num_codebooks), np.int32)
