@@ -19,8 +19,9 @@ from repro.kernels.xla_flash import blockwise_attention
 
 
 def _time(fn, *args, iters=3):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    # one warmup call (the old tuple-dispatch one-liner called fn twice
+    # — or three times for tuples — before timing even started)
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
@@ -101,6 +102,48 @@ def run_all():
     return rows
 
 
+def tune_section():
+    """Autotuning dogfood sweep (ROADMAP item 3): run the repro.tune
+    smoke sweeps through Experiment(engine="sim") on a seeded adversarial
+    grid and record the exploration accounting.  Asserted invariants:
+
+    * speedup >= 1.0 — the incumbent (current dispatch default) is the
+      floor, a sweep can never make dispatch slower;
+    * pruned > 0 — the paper's timeout/domino rule actually fired on the
+      adversarial grid (pathological configs died without being run);
+    * under_cap — the budget_cap sweep finished under its CostMeter cap,
+      with per-config attributed costs on the records.
+    """
+    from repro.tune.tuner import tune
+
+    cap = 150.0
+    sweeps = []
+    for kern in ("flash_attention", "ssd_scan"):
+        rep = tune(kern, engine="sim", smoke=True, adversarial=4, seed=0,
+                   budget_cap=cap, store=False)
+        assert rep.speedup >= 1.0 - 1e-9, rep.summary()
+        assert rep.pruned > 0, f"domino rule never fired: {rep.summary()}"
+        assert rep.under_cap, rep.summary()
+        assert any(c.get("cost") is not None for c in rep.configs), \
+            "no per-config CostMeter attribution on the results table"
+        sweeps.append({
+            "kernel": kern, "backend": rep.backend,
+            "shape_bucket": rep.shape_bucket,
+            "explored": rep.explored, "measured": rep.measured,
+            "timed_out": rep.timed_out, "pruned": rep.pruned,
+            "pruned_fraction": round(rep.pruned_fraction, 3),
+            "default_config": rep.default_config,
+            "default_us": round(rep.default_us, 1),
+            "best_config": rep.best_config,
+            "best_us": round(rep.best_us, 1),
+            "speedup": round(rep.speedup, 3),
+            "budget_cap": rep.budget_cap,
+            "cost_total": rep.cost_total,
+            "under_cap": rep.under_cap,
+        })
+    return {"engine": "sim", "adversarial": 4, "seed": 0, "sweeps": sweeps}
+
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -112,9 +155,15 @@ def main(argv=None):
         "bench": "kernel",
         "rows": [{"name": name, "us": round(us, 1), "note": note}
                  for name, us, note in run_all()],
+        "tune": tune_section(),
     }
     for row in payload["rows"]:
         print(f"{row['name']:32s} {row['us']:10.1f}us  {row['note']}")
+    for sw in payload["tune"]["sweeps"]:
+        print(f"tune:{sw['kernel']:27s} best={sw['best_config']} "
+              f"{sw['speedup']:.2f}x | explored={sw['explored']} "
+              f"pruned={sw['pruned']} timed_out={sw['timed_out']} "
+              f"cost={sw['cost_total']:.2f}/{sw['budget_cap']:.0f}")
     with open(args.out, "w") as fh:
         json.dump(payload, fh, indent=2)
         fh.write("\n")

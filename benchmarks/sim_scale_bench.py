@@ -38,27 +38,11 @@ from repro.core.experiment import Experiment        # noqa: E402
 from repro.core.scheduler import DONE, PRUNED, TIMED_OUT  # noqa: E402
 from repro.core.server import ServerConfig          # noqa: E402
 from repro.core.sim import InstanceType, SimParams, SimTask  # noqa: E402
+from repro.tune.measure import retry_measurement      # noqa: E402,F401
+# retry_measurement moved to repro.tune.measure (shared with the kernel
+# autotuner); re-exported here because serve_bench imports it from us.
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def retry_measurement(out: dict, label: str, first, measure, accept, best,
-                      retries: int = 1):
-    """Noisy-runner guard shared by every smoke-floor measurement.
-
-    Keeps ``first`` when ``accept`` passes; otherwise re-runs ``measure``
-    up to ``retries`` times, folding each repeat in with ``best`` (``max``
-    for scalars, an argmax lambda for records) and appending it under
-    ``out["retries"][label]`` — the artifact shows exactly how flaky the
-    runner was instead of silently absorbing it."""
-    result = first
-    for _ in range(retries):
-        if accept(result):
-            break
-        again = measure()
-        out.setdefault("retries", {}).setdefault(label, []).append(again)
-        result = best(result, again)
-    return result
 
 
 def _workload(n_clients: int, tasks_per_client: int, dur_lo: float,

@@ -8,16 +8,32 @@ Dispatch policy (this container is CPU-only; TPU is the *target*):
 
 so models always call ``ops.flash_attention`` / ``ops.ssd_scan`` and get the
 best available implementation.
+
+Tuned-config plumbing (``repro.tune``): every block/chunk knob defaults
+to ``None``, meaning "consult the persistent best-config cache for this
+(kernel, shape bucket, dtype, backend), else use the built-in default".
+A cache hit dispatches with the tuned blocks; a miss — including no
+cache file at all — is byte-identical to the pre-tuning behavior.  An
+explicit argument always wins over the cache.  Tuned values are
+re-validated against the kernels' divisibility constraints here, so a
+stale or foreign cache entry degrades to the default instead of
+crashing the caller.
 """
 from __future__ import annotations
 
 import os
-from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.tune import cache as _tune_cache
+
+# built-in defaults served on a cache miss — mirrored by
+# repro.tune.space.SPECS[*].defaults (the tuner's incumbents)
+_DEFAULT_BLOCK_Q = 128
+_DEFAULT_BLOCK_K = 128
+_DEFAULT_DECODE_BLOCK_K = 128
+_DEFAULT_CHUNK = 64
 
 
 def _mode() -> str:
@@ -29,13 +45,45 @@ def _mode() -> str:
     return "ref"
 
 
+def _tuned(kernel: str, shape: dict, dtype) -> dict:
+    """Best-config cache lookup for the current dispatch backend
+    (empty dict on any miss)."""
+    return _tune_cache.best_config(kernel, shape, str(dtype)) or {}
+
+
+def _fit_block(value, dim: int, default: int) -> int:
+    """Accept a tuned block size only if it satisfies the kernel's
+    static constraint after the kernel's own min-clamp; otherwise fall
+    back to the default (preserving the exact pre-tuning behavior,
+    including its failure modes)."""
+    v = int(value)
+    clamped = min(v, dim)
+    if clamped > 0 and dim % clamped == 0:
+        return v
+    return default
+
+
 def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
-                    q_offset: int = 0, block_q: int = 128, block_k: int = 128):
-    """GQA flash attention. q: [B,Sq,H,D], k/v: [B,Sk,K,D] -> [B,Sq,H,D]."""
+                    q_offset: int = 0, block_q: int | None = None,
+                    block_k: int | None = None):
+    """GQA flash attention. q: [B,Sq,H,D], k/v: [B,Sk,K,D] -> [B,Sq,H,D].
+
+    ``block_q``/``block_k``: explicit value > tuned cache > 128."""
     mode = _mode()
     if mode == "naive":
         return ref.attention_ref(q, k, v, causal=causal, scale=scale,
                                  q_offset=q_offset)
+    Bsz, Sq, H, D = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    if block_q is None or block_k is None:
+        cfg = _tuned("flash_attention",
+                     {"b": Bsz, "s": Sk, "h": H, "kvh": K, "d": D}, q.dtype)
+        if block_q is None:
+            block_q = _fit_block(cfg.get("block_q", _DEFAULT_BLOCK_Q),
+                                 Sq, _DEFAULT_BLOCK_Q)
+        if block_k is None:
+            block_k = _fit_block(cfg.get("block_k", _DEFAULT_BLOCK_K),
+                                 Sk, _DEFAULT_BLOCK_K)
     if mode == "ref":
         # blockwise (flash-style) XLA lowering — same algorithm as the
         # Pallas kernel, honest HBM profile on non-TPU backends.
@@ -53,17 +101,27 @@ def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
 
 
 def decode_attention(q, k, v, kv_len, *, scale: float | None = None,
-                     block_k: int = 128):
+                     block_k: int | None = None):
     """Sq=1 GQA decode attention over a ragged KV cache.
 
     q: [B,H,D], k/v: [B,Sk,K,D/Dv], kv_len: [B] int32 -> [B,H,Dv].  Same
     dispatch policy as ``flash_attention``: the pure-jnp reference is the
     XLA fallback on non-TPU backends, the Pallas decode kernel
     (``kernels/decode_attention.py``) runs on TPU or under
-    ``REPRO_PALLAS=interpret``."""
+    ``REPRO_PALLAS=interpret``.  ``block_k``: explicit > tuned > 128
+    (the wrapper zero-pads Sk, so any positive tuned value is valid)."""
     mode = _mode()
     if mode in ("ref", "naive"):
         return ref.decode_attention_ref(q, k, v, kv_len, scale=scale)
+    if block_k is None:
+        Bsz, H, D = q.shape
+        Sk, K = k.shape[1], k.shape[2]
+        cfg = _tuned("decode_attention",
+                     {"b": Bsz, "sk": Sk, "h": H, "kvh": K, "d": D},
+                     q.dtype)
+        block_k = int(cfg.get("block_k", _DEFAULT_DECODE_BLOCK_K))
+        if block_k <= 0:
+            block_k = _DEFAULT_DECODE_BLOCK_K
     from repro.kernels import decode_attention as dk
 
     return dk.decode_attention(q, k, v, kv_len, scale=scale, block_k=block_k,
@@ -79,7 +137,9 @@ def decode_attention_paged(q, k_pool, v_pool, page_table, kv_len, *,
     ``decode_attention``: the pure-jnp reference (page gather + ragged
     dense attention) on non-TPU backends, the page-table Pallas kernel
     (scalar-prefetched tables steering the K/V DMA) on TPU or under
-    ``REPRO_PALLAS=interpret``."""
+    ``REPRO_PALLAS=interpret``.  The page geometry is fixed by the pool
+    the caller built — the tuned ``page_size`` recommendation is
+    consumed where the pool is constructed (``serve/engine.py``)."""
     mode = _mode()
     if mode in ("ref", "naive"):
         return ref.decode_attention_paged_ref(q, k_pool, v_pool, page_table,
@@ -91,9 +151,21 @@ def decode_attention_paged(q, k_pool, v_pool, page_table, kv_len, *,
                                      interpret=(mode == "interpret"))
 
 
-def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 64, h0=None,
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int | None = None, h0=None,
              return_final_state: bool = False):
-    """Mamba-2 SSD chunked scan. See kernels.ref.ssd_chunked_ref."""
+    """Mamba-2 SSD chunked scan. See kernels.ref.ssd_chunked_ref.
+
+    ``chunk``: explicit value > tuned cache > 64.  Model code that bakes
+    a semantic chunk into its config keeps passing it explicitly (and is
+    byte-identical); pass ``None`` to opt into tuned chunking."""
+    if chunk is None:
+        Bsz, S, H, P = x.shape
+        G, N = Bm.shape[2], Bm.shape[3]
+        cfg = _tuned("ssd_scan",
+                     {"b": Bsz, "s": S, "h": H, "p": P, "g": G, "n": N},
+                     x.dtype)
+        chunk = _fit_block(cfg.get("chunk", _DEFAULT_CHUNK), S,
+                           _DEFAULT_CHUNK)
     mode = _mode()
     if mode == "ref":
         return ref.ssd_chunked_ref(

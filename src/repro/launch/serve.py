@@ -38,8 +38,9 @@ def main(argv=None):
                     default="dense",
                     help="dense: per-slot max_seq KV stripes; paged: "
                          "shared page pool with memory-aware admission")
-    ap.add_argument("--page-size", type=int, default=16,
-                    help="KV rows per page (paged layout)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="KV rows per page (paged layout; default: the "
+                         "repro.tune best-config cache, else 16)")
     ap.add_argument("--num-pages", type=int, default=None,
                     help="pool size in pages (paged layout; default "
                          "slots * ceil(max_seq/page_size))")

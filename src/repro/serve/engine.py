@@ -66,6 +66,38 @@ from repro.serve.kv_pool import KVPool, PoolExhausted
 from repro.serve.sampler import sample, sample_batch
 
 
+# paged-KV geometry served on a tune-cache miss (the pre-tuning default)
+_DEFAULT_PAGE_SIZE = 16
+
+
+def _resolve_page_size(cfg, batch_slots: int, max_seq: int) -> int:
+    """Tuned ``page_size`` for this engine's decode geometry.
+
+    Consults the ``repro.tune`` best-config cache under the
+    ``decode_attention_paged`` key (shape = this engine's steady-state
+    decode call: B=slots, Sk=max_seq, GQA geometry from cfg).  A miss —
+    or a cfg without GQA attention fields (pure-SSM / MLA stacks, whose
+    paged pool is not the tuned kernel) — returns the built-in default,
+    keeping behavior byte-identical when no cache is present.  A tuned
+    value is re-validated against the kernel's constraint
+    (0 < page_size <= max_seq) so a stale entry degrades to the default."""
+    kvh = getattr(cfg, "num_kv_heads", None)
+    heads = getattr(cfg, "num_heads", None)
+    hd = getattr(cfg, "head_dim", None)
+    if not (kvh and heads and hd):
+        return _DEFAULT_PAGE_SIZE
+    from repro.tune import cache as tune_cache
+
+    shape = {"b": batch_slots, "sk": max_seq, "kvh": kvh,
+             "g": max(1, heads // kvh), "d": hd}
+    hit = tune_cache.best_config("decode_attention_paged", shape,
+                                 str(getattr(cfg, "dtype", "float32")))
+    ps = int((hit or {}).get("page_size", _DEFAULT_PAGE_SIZE))
+    if not 0 < ps <= max_seq:
+        ps = _DEFAULT_PAGE_SIZE
+    return ps
+
+
 @dataclass
 class Request:
     prompt: np.ndarray          # [S] (or [S, cb]) int32
@@ -243,7 +275,7 @@ class DecodeEngine:
                  max_seq: int = 512, rng_seed: int = 0, mode: str = "fused",
                  steps_per_sync: int = 8, prefill_chunk: int = 0,
                  max_prefill_tokens_per_sync: int | None = None,
-                 kv_layout: str = "dense", page_size: int = 16,
+                 kv_layout: str = "dense", page_size: int | None = None,
                  num_pages: int | None = None):
         assert mode in ("fused", "host"), mode
         assert kv_layout in ("dense", "paged"), kv_layout
@@ -258,6 +290,9 @@ class DecodeEngine:
         self.kv_layout = kv_layout
 
         if kv_layout == "paged":
+            # explicit page_size > tuned cache > default (16)
+            if page_size is None:
+                page_size = _resolve_page_size(cfg, batch_slots, max_seq)
             width = -(-max_seq // int(page_size))
             if num_pages is None:
                 # capacity parity with the dense layout by default; size

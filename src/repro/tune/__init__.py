@@ -1,0 +1,39 @@
+"""``repro.tune`` — kernel autotuning driven through the Experiment
+facade, with a persistent best-config cache wired into ops dispatch.
+
+Submodules: ``space`` (per-kernel tunable grids + roofline cost model),
+``runner`` (measurement ``@task``s), ``cache`` (persistent best-config
+store), ``tuner`` (the sweep orchestration), ``measure`` (shared timing
+utilities).  CLI: ``python -m repro.tune --kernel flash_attention
+--smoke``.
+
+Heavy submodules load lazily: ``kernels/ops.py`` imports
+``repro.tune.cache`` on its hot dispatch path, which must not drag the
+Experiment facade (or jax tracing machinery) in behind it.
+"""
+from __future__ import annotations
+
+_LAZY = {
+    "tune": ("repro.tune.tuner", "tune"),
+    "tune_all": ("repro.tune.tuner", "tune_all"),
+    "TuneReport": ("repro.tune.tuner", "TuneReport"),
+    "TuneCache": ("repro.tune.cache", "TuneCache"),
+    "best_config": ("repro.tune.cache", "best_config"),
+    "SPECS": ("repro.tune.space", "SPECS"),
+    "build_space": ("repro.tune.space", "build_space"),
+    "predicted_cost_us": ("repro.tune.space", "predicted_cost_us"),
+    "retry_measurement": ("repro.tune.measure", "retry_measurement"),
+    "time_fn": ("repro.tune.measure", "time_fn"),
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name: str):
+    try:
+        mod, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(name) from None
+    import importlib
+
+    return getattr(importlib.import_module(mod), attr)

@@ -1,0 +1,266 @@
+"""Persistent best-config cache for tuned kernel parameters.
+
+Entries are keyed by ``(kernel, shape_bucket, dtype, backend)``:
+
+* ``kernel``  — the ops-layer name (``flash_attention``, ``ssd_scan``,
+  ``decode_attention``, ``decode_attention_paged``);
+* ``shape_bucket`` — every shape field rounded up to a power of two
+  (``b1-s256-h4-kvh2-d64``), so nearby shapes share an entry;
+* ``dtype``   — the input dtype name;
+* ``backend`` — the *dispatch* backend (``tpu`` / ``interpret`` / the
+  jax platform name for the XLA reference path), because a block size
+  tuned for the Pallas kernel says nothing about the XLA lowering.
+
+The store is a single versioned JSON file.  Writes are atomic
+(temp file in the same directory + ``os.replace``), so a crash mid-write
+can never corrupt a previously-good cache.  Every entry records a hash
+of the kernel's source module; a lookup against a since-edited kernel is
+a miss (stale tunings are never served).  ``REPRO_TUNE_CACHE`` overrides
+the cache path (empty or ``0`` disables the cache entirely); the default
+lives under ``~/.cache/repro/tune_cache.json``.
+
+This module deliberately imports nothing from ``repro`` at module level:
+``kernels/ops.py`` consults it on every dispatch, so it must be cheap
+and cycle-free to import.
+"""
+from __future__ import annotations
+
+import contextlib
+import hashlib
+import importlib.util
+import json
+import math
+import os
+import tempfile
+
+CACHE_VERSION = 1
+ENV_VAR = "REPRO_TUNE_CACHE"
+DEFAULT_PATH = os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                            "tune_cache.json")
+
+# kernel name -> module whose source hash gates entry staleness
+KERNEL_MODULES = {
+    "flash_attention": "repro.kernels.flash_attention",
+    "ssd_scan": "repro.kernels.ssd_scan",
+    "decode_attention": "repro.kernels.decode_attention",
+    "decode_attention_paged": "repro.kernels.decode_attention",
+}
+
+_hash_cache: dict[str, str] = {}
+
+
+def kernel_source_hash(kernel: str) -> str:
+    """Short sha256 of the kernel's implementation module source.  Found
+    via ``find_spec`` (no import executed) and memoized per process."""
+    mod = KERNEL_MODULES.get(kernel)
+    if mod is None:
+        raise KeyError(f"unknown kernel {kernel!r}")
+    h = _hash_cache.get(mod)
+    if h is None:
+        spec = importlib.util.find_spec(mod)
+        with open(spec.origin, "rb") as fh:
+            h = hashlib.sha256(fh.read()).hexdigest()[:12]
+        _hash_cache[mod] = h
+    return h
+
+
+def dispatch_backend() -> str:
+    """The backend family the ops layer will dispatch to right now —
+    mirrors ``kernels.ops._mode`` so tuned entries only ever apply to
+    the code path they were measured on."""
+    env = os.environ.get("REPRO_PALLAS", "auto")
+    if env == "interpret":
+        return "interpret"
+    import jax
+
+    return jax.default_backend()
+
+
+def _bucket_field(v) -> int:
+    v = int(v)
+    if v <= 1:
+        return 1
+    return 1 << math.ceil(math.log2(v))
+
+
+def shape_bucket(shape: dict) -> str:
+    """Canonical bucket string: fields in sorted order, each rounded up
+    to the next power of two."""
+    return "-".join(f"{k}{_bucket_field(v)}" for k, v in
+                    sorted(shape.items()))
+
+
+def _entry_key(kernel: str, bucket: str, dtype: str, backend: str) -> str:
+    return f"{kernel}|{backend}|{dtype}|{bucket}"
+
+
+def _bucket_distance(a: dict, b: dict) -> float:
+    """Log2 distance between two shape dicts; infinite when the field
+    sets differ (no meaningful fallback across different workload
+    identities)."""
+    if set(a) != set(b):
+        return float("inf")
+    return sum(abs(math.log2(_bucket_field(a[k])) -
+                   math.log2(_bucket_field(b[k]))) for k in a)
+
+
+class TuneCache:
+    """One JSON best-config store (see module docstring).  Instances
+    reload from disk automatically when the file's mtime changes, so a
+    long-lived process picks up a concurrent ``repro.tune`` run."""
+
+    def __init__(self, path: str | None = None):
+        self.path = path if path is not None else _env_path()
+        self._entries: dict[str, dict] = {}
+        self._loaded_mtime: float | None = None
+        self.hits = 0
+        self.misses = 0
+
+    # -- persistence ---------------------------------------------------
+    def _refresh(self) -> None:
+        if not self.path:
+            return
+        try:
+            mtime = os.stat(self.path).st_mtime_ns
+        except OSError:
+            self._entries, self._loaded_mtime = {}, None
+            return
+        if mtime == self._loaded_mtime:
+            return
+        try:
+            with open(self.path, encoding="utf-8") as fh:
+                payload = json.load(fh)
+        except (OSError, json.JSONDecodeError, UnicodeDecodeError):
+            # a corrupt cache must never break dispatch — treat as empty
+            payload = {}
+        if payload.get("version") != CACHE_VERSION:
+            payload = {}
+        self._entries = dict(payload.get("entries", {}))
+        self._loaded_mtime = mtime
+
+    def _write(self) -> None:
+        payload = {"version": CACHE_VERSION, "entries": self._entries}
+        d = os.path.dirname(os.path.abspath(self.path)) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(prefix=".tune_cache.", suffix=".tmp",
+                                   dir=d)
+        try:
+            with os.fdopen(fd, "w", encoding="utf-8") as fh:
+                json.dump(payload, fh, indent=2, sort_keys=True)
+                fh.write("\n")
+            os.replace(tmp, self.path)      # atomic on POSIX
+        except BaseException:
+            with contextlib.suppress(OSError):
+                os.unlink(tmp)
+            raise
+        self._loaded_mtime = os.stat(self.path).st_mtime_ns
+
+    # -- API -----------------------------------------------------------
+    def store(self, kernel: str, shape: dict, dtype: str, backend: str,
+              config: dict, *, runtime_us: float,
+              default_us: float | None = None, meta: dict | None = None,
+              ) -> str:
+        """Insert/replace the best config for one key; returns the key.
+        Re-reads the file first so concurrent tuners merge instead of
+        clobbering each other's kernels."""
+        if not self.path:
+            raise RuntimeError(
+                f"tune cache disabled ({ENV_VAR} is empty) — cannot store")
+        self._refresh()
+        bucket = shape_bucket(shape)
+        key = _entry_key(kernel, bucket, dtype, backend)
+        self._entries[key] = {
+            "kernel": kernel, "backend": backend, "dtype": dtype,
+            "bucket": bucket, "shape": {k: int(v) for k, v in shape.items()},
+            "config": {k: int(v) for k, v in config.items()},
+            "runtime_us": round(float(runtime_us), 3),
+            "default_us": (round(float(default_us), 3)
+                           if default_us is not None else None),
+            "src_hash": kernel_source_hash(kernel),
+            **({"meta": meta} if meta else {}),
+        }
+        self._write()
+        return key
+
+    def lookup(self, kernel: str, shape: dict, dtype: str,
+               backend: str) -> dict | None:
+        """Best config for the key, or None.  Exact bucket first, then
+        the nearest bucket with the same field set (shape-bucket
+        fallback); entries whose kernel source hash is stale never
+        match."""
+        if not self.path:
+            return None
+        self._refresh()
+        want_hash = kernel_source_hash(kernel)
+        bucket = shape_bucket(shape)
+        entry = self._entries.get(_entry_key(kernel, bucket, dtype, backend))
+        if entry is not None and entry.get("src_hash") == want_hash:
+            self.hits += 1
+            return dict(entry["config"])
+        best, best_d = None, float("inf")
+        for e in self._entries.values():
+            if (e.get("kernel") != kernel or e.get("backend") != backend
+                    or e.get("dtype") != dtype
+                    or e.get("src_hash") != want_hash):
+                continue
+            d = _bucket_distance(shape, e.get("shape", {}))
+            if d < best_d:
+                best, best_d = e, d
+        if best is not None:
+            self.hits += 1
+            return dict(best["config"])
+        self.misses += 1
+        return None
+
+    def entries(self) -> dict:
+        self._refresh()
+        return {k: dict(v) for k, v in self._entries.items()}
+
+
+# ---------------------------------------------------------------------------
+# process-level singleton (what kernels/ops.py consults)
+# ---------------------------------------------------------------------------
+def _env_path() -> str:
+    p = os.environ.get(ENV_VAR)
+    if p is None:
+        return DEFAULT_PATH
+    if p in ("", "0"):
+        return ""                  # disabled
+    return p
+
+
+_cache: TuneCache | None = None
+
+
+def get_cache() -> TuneCache:
+    """The shared cache instance, re-created when ``REPRO_TUNE_CACHE``
+    changes (tests flip it per-case)."""
+    global _cache
+    path = _env_path()
+    if _cache is None or _cache.path != path:
+        _cache = TuneCache(path)
+    return _cache
+
+
+def reset() -> None:
+    """Drop the singleton (tests)."""
+    global _cache
+    _cache = None
+    _hash_cache.clear()
+
+
+def best_config(kernel: str, shape: dict, dtype: str,
+                backend: str | None = None) -> dict | None:
+    """Dispatch-time lookup: the tuned config for the current backend,
+    or None on any miss (absent cache, stale hash, disabled)."""
+    cache = get_cache()
+    if not cache.path:
+        return None
+    return cache.lookup(kernel, shape, dtype,
+                        backend if backend is not None else
+                        dispatch_backend())
+
+
+__all__ = ["TuneCache", "get_cache", "reset", "best_config",
+           "shape_bucket", "dispatch_backend", "kernel_source_hash",
+           "CACHE_VERSION", "ENV_VAR", "KERNEL_MODULES"]

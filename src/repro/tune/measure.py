@@ -1,0 +1,76 @@
+"""Measurement primitives shared by the autotuner and the benchmarks.
+
+Two concerns live here, both motivated by Gent & Kotthoff's virtualised-
+hardware reliability results (PAPERS.md): a single wall-clock sample on a
+shared machine is not a measurement.
+
+* :func:`time_fn` — warm up exactly once (compile included), then take
+  repeated samples and reject the slow outliers (GC pauses, noisy
+  neighbours) before averaging.
+* :func:`retry_measurement` — the noisy-runner guard the smoke-floor
+  benchmarks share: keep the first measurement when it passes, otherwise
+  re-run a bounded number of times, recording every repeat in the
+  artifact so flakiness is visible instead of silently absorbed.
+  (Moved here from ``benchmarks/sim_scale_bench.py`` so library code can
+  reuse it; the benchmarks import it from this module.)
+"""
+from __future__ import annotations
+
+import math
+import time
+
+
+def robust_mean_us(samples_us: list[float], outlier_frac: float = 0.25):
+    """Mean of the samples after dropping the slowest ``outlier_frac``
+    share (at least one sample is always kept).  Returns ``(mean, kept)``
+    so callers can report how many samples survived rejection."""
+    if not samples_us:
+        raise ValueError("no samples")
+    keep = max(1, math.ceil(len(samples_us) * (1.0 - outlier_frac)))
+    kept = sorted(samples_us)[:keep]
+    return sum(kept) / len(kept), len(kept)
+
+
+def time_fn(fn, *args, iters: int = 5, outlier_frac: float = 0.25):
+    """Time ``fn(*args)`` in microseconds: one warmup call (compile +
+    cache fill — the result is blocked on but never re-computed for the
+    warmup, see the kernel_bench double-call bug this replaces), then
+    ``iters`` blocked samples, outlier-rejected via :func:`robust_mean_us`.
+
+    Returns ``(mean_us, n_kept, samples_us)``.  Works on any callable
+    returning a jax pytree (``jax.block_until_ready`` accepts pytrees,
+    including tuples) or plain Python values.
+    """
+    import jax
+
+    out = fn(*args)
+    jax.block_until_ready(out)           # the one warmup call
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append((time.perf_counter() - t0) * 1e6)
+    mean, kept = robust_mean_us(samples, outlier_frac)
+    return mean, kept, samples
+
+
+def retry_measurement(out: dict, label: str, first, measure, accept, best,
+                      retries: int = 1):
+    """Noisy-runner guard shared by every smoke-floor measurement.
+
+    Keeps ``first`` when ``accept`` passes; otherwise re-runs ``measure``
+    up to ``retries`` times, folding each repeat in with ``best`` (``max``
+    for scalars, an argmax lambda for records) and appending it under
+    ``out["retries"][label]`` — the artifact shows exactly how flaky the
+    runner was instead of silently absorbing it."""
+    result = first
+    for _ in range(retries):
+        if accept(result):
+            break
+        again = measure()
+        out.setdefault("retries", {}).setdefault(label, []).append(again)
+        result = best(result, again)
+    return result
+
+
+__all__ = ["robust_mean_us", "time_fn", "retry_measurement"]
